@@ -1,0 +1,38 @@
+"""Fig 14: component ablation — Layout → +Sel.Vec (CASR) → +Ent.&$ —
+insert and concurrent-search throughput."""
+from __future__ import annotations
+
+from benchmarks import common as Cm
+
+STEPS = (("layout", "layout_only"), ("sel_vec", "sel_vec"),
+         ("ent_cache", "navis"))
+
+
+def run(ds_name: str = "fineweb-like", quick: bool = False) -> list[str]:
+    rows = []
+    results = {}
+    for label, system in STEPS:
+        eng, state, ds = Cm.build_engine(system, ds_name)
+        res = Cm.concurrent_run(eng, state, ds, rounds=4 if quick else 7)
+        res.pop("state")
+        results[label] = res
+        rows.append(Cm.fmt_row(f"fig14_{label}",
+                               insert_tput=res["insert_tput"],
+                               search_qps=res["search_qps"],
+                               recall=res["recall"]))
+    rows.append(Cm.fmt_row(
+        "fig14_gains",
+        selvec_insert_x=results["sel_vec"]["insert_tput"]
+        / results["layout"]["insert_tput"],
+        selvec_search_x=results["sel_vec"]["search_qps"]
+        / results["layout"]["search_qps"],
+        entcache_insert_x=results["ent_cache"]["insert_tput"]
+        / results["sel_vec"]["insert_tput"],
+        entcache_search_x=results["ent_cache"]["search_qps"]
+        / results["sel_vec"]["search_qps"]))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,58 @@
+"""Fig 17: (a) search-only QPS at several |E_search|; (b) cache-policy
+hit rates at a forced-small cache (NAVIS vs LRU/CLOCK/LFU, and NAVIS
+without the dynamic entrance graph)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common as Cm
+from repro.data import insert_stream, query_stream
+
+
+def run(ds_name: str = "fineweb-like", quick: bool = False) -> list[str]:
+    rows = []
+    # (a) search-only sweep over E_search
+    for e_search in ((24, 40) if quick else (24, 40, 64)):
+        for system in ("odinann", "navis"):
+            eng, state, ds = Cm.build_engine(system, ds_name,
+                                             e_search=e_search)
+            res = Cm.search_only_run(eng, state, ds,
+                                     n_queries=100 if quick else 200)
+            rows.append(Cm.fmt_row(f"fig17a_{system}_es{e_search}",
+                                   qps=res["qps"], recall=res["recall"]))
+
+    # (b) hit rates under a small cache after a drifted insert phase
+    small = 48                                # forced-small capacity (pages)
+    policies = [("navis", "navis", "dynamic"),
+                ("navis_wo_ent", "navis", "static"),
+                ("lru", "lru", "dynamic"),
+                ("clock", "clock", "dynamic"),
+                ("lfu", "lfu", "dynamic")]
+    for label, policy, entrance in policies:
+        eng, state, ds = Cm.build_engine(
+            "navis", ds_name, cache_policy=policy, entrance=entrance,
+            cache_capacity_pages=small)
+        key = jax.random.PRNGKey(17)
+        newv = insert_stream(key, ds["cents"], 40 if quick else 100,
+                             noise=ds["noise"], drift=0.3)
+        _, state = eng.insert_batch(state, newv)
+        # warm, then measure
+        qs = query_stream(jax.random.fold_in(key, 1), ds["cents"],
+                          100 if quick else 200, noise=ds["noise"])
+        _, _, _, state = eng.search_batch(state, qs)
+        h0 = int(state.ctr_search.cache_hits)
+        m0 = int(state.ctr_search.cache_misses)
+        qs2 = query_stream(jax.random.fold_in(key, 2), ds["cents"],
+                           100 if quick else 200, noise=ds["noise"])
+        _, _, _, state = eng.search_batch(state, qs2)
+        h = int(state.ctr_search.cache_hits) - h0
+        m = int(state.ctr_search.cache_misses) - m0
+        rows.append(Cm.fmt_row(f"fig17b_{label}",
+                               hit_rate=h / max(h + m, 1)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,44 @@
+"""Fig 10–12: concurrent search+insert across all systems and datasets —
+insertion throughput, search QPS, mean latency, recall."""
+from __future__ import annotations
+
+from benchmarks import common as Cm
+
+
+def run(ds_name: str | None = None, quick: bool = False) -> list[str]:
+    rows = []
+    datasets = [ds_name] if ds_name else ["fineweb-like", "deep-like"]
+    systems = Cm.SYSTEMS if not quick else ("freshdiskann", "odinann",
+                                            "navis")
+    for name in datasets:
+        base = {}
+        for system in systems:
+            eng, state, ds = Cm.build_engine(system, name)
+            res = Cm.concurrent_run(eng, state, ds,
+                                    rounds=5 if quick else 8)
+            res.pop("state")
+            rows.append(Cm.fmt_row(f"fig10_{name}_{system}", **res))
+            base[system] = res
+        if "odinann" in base and "navis" in base:
+            rows.append(Cm.fmt_row(
+                f"fig10_{name}_navis_vs_odinann",
+                insert_tput_x=base["navis"]["insert_tput"]
+                / max(base["odinann"]["insert_tput"], 1e-9),
+                search_qps_x=base["navis"]["search_qps"]
+                / base["odinann"]["search_qps"],
+                latency_reduction_frac=1 - base["navis"][
+                    "search_lat_mean_ms"]
+                / base["odinann"]["search_lat_mean_ms"]))
+        if "freshdiskann" in base and "navis" in base:
+            rows.append(Cm.fmt_row(
+                f"fig10_{name}_navis_vs_freshdiskann",
+                insert_tput_x=base["navis"]["insert_tput"]
+                / max(base["freshdiskann"]["insert_tput"], 1e-9),
+                search_qps_x=base["navis"]["search_qps"]
+                / max(base["freshdiskann"]["search_qps"], 1e-9)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,66 @@
+"""Fig 5: (a) entrance-graph staleness vs average search hops under
+drifted insertions — w/o entrance, static, dynamic (NAVIS-update);
+(b) cost of a full entrance rebuild relative to a single search."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as Cm
+from repro.data import insert_stream, query_stream
+
+
+def run(ds_name: str = "deep-like", quick: bool = False) -> list[str]:
+    rows = []
+    n_waves = 3 if quick else 5
+    per_wave = 50 if quick else 90
+    for mode in ("none", "static", "dynamic"):
+        eng, state, ds = Cm.build_engine("navis", ds_name, entrance=mode)
+        key = jax.random.PRNGKey(7)
+        hops_by_wave = []
+        for w in range(n_waves):
+            # queries drawn from the *drifted* mixture — the newly inserted
+            # regions the paper's Fig 5(a) probes
+            kq = jax.random.fold_in(key, 100 + w)
+            drift = 0.5 * (w + 1) / n_waves
+            qs = insert_stream(kq, ds["cents"], 40, noise=ds["noise"],
+                               drift=drift)
+            _, _, st_s, state = eng.search_batch(state, qs)
+            hops_by_wave.append(float(np.asarray(
+                st_s.serial_rounds).mean()))
+            newv = insert_stream(jax.random.fold_in(key, w), ds["cents"],
+                                 per_wave, noise=ds["noise"], drift=drift)
+            _, state = eng.insert_batch(state, newv)
+        rows.append(Cm.fmt_row(
+            f"fig5a_{mode}", first_wave_hops=hops_by_wave[0],
+            last_wave_hops=hops_by_wave[-1],
+            hops_growth=hops_by_wave[-1] / max(hops_by_wave[0], 1e-9),
+            ent_count=int(state.ent.count)))
+
+    # (b) full rebuild vs one search, via the cost model:
+    # rebuild = |G_ent| position-seeks on the main graph (DiskANN-style
+    # rebuild); search = one modeled search latency.  Reported at our scale
+    # and extrapolated to the paper's (1M entrance vertices).
+    eng, state, ds = Cm.build_engine("navis", ds_name)
+    qs = query_stream(jax.random.PRNGKey(8), ds["cents"], 20,
+                      noise=ds["noise"])
+    _, _, st_s, state = eng.search_batch(state, qs)
+    search_lat = float(Cm.latencies_s(st_s).mean())
+    newv = insert_stream(jax.random.PRNGKey(9), ds["cents"], 20,
+                         noise=ds["noise"])
+    st_i, state = eng.insert_batch(state, newv)
+    seek_lat = float(Cm.latencies_s(st_i).mean())
+    ent_n = int(state.ent.count)
+    ratio_here = ent_n * seek_lat / search_lat
+    ratio_paper = 1_000_000 * seek_lat / search_lat
+    rows.append(Cm.fmt_row("fig5b_rebuild_cost",
+                           rebuild_vs_search_ratio=ratio_here,
+                           extrapolated_paper_scale=ratio_paper,
+                           navis_update_cost_vs_search=0.0))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

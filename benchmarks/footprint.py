@@ -1,0 +1,47 @@
+"""Fig 16: peak host-memory and storage usage per system.
+
+Host memory = PQ codes + entrance graph + indirection table + cache
+capacity + (FreshDiskANN) insertion buffer.  Storage = live pages × 4 KiB
+(+ FreshDiskANN's double buffer during merge)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as Cm
+from repro.core.iomodel import PAGE_BYTES
+
+
+def run(ds_name: str = "fineweb-like", quick: bool = False) -> list[str]:
+    rows = []
+    for system in ("freshdiskann", "odinann", "odinann_cache", "navis"):
+        eng, state, ds = Cm.build_engine(system, ds_name)
+        spec = eng.spec
+        n = int(state.store.count)
+        pq_b = n * spec.pq_m
+        ind_b = n * 8                              # (page, slot) per vertex
+        ent_b = int(state.ent.ids.nbytes + state.ent.edges.nbytes) \
+            if spec.entrance != "none" else 0
+        cache_b = spec.cache_capacity_pages * PAGE_BYTES \
+            if spec.cache_policy != "none" else 0
+        buf_b = spec.buffer_max * ds["dim"] * 4 \
+            if spec.update_path == "buffered" else 0
+        host = pq_b + ind_b + ent_b + cache_b + buf_b
+
+        lspec = spec.lspec
+        if spec.layout == "packed":
+            pages = n * lspec.packed_pages_per_vertex
+        else:
+            pages = int(np.ceil(n / lspec.edgelists_per_page)) + \
+                int(np.ceil(n * lspec.vector_bytes / PAGE_BYTES))
+        storage = pages * PAGE_BYTES
+        if spec.update_path == "buffered":
+            storage *= 2                           # double-buffered merge
+        rows.append(Cm.fmt_row(f"fig16_{system}",
+                               host_MiB=host / 2 ** 20,
+                               storage_MiB=storage / 2 ** 20))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,41 @@
+"""Fig 18(a): CASR group-size sensitivity — insert throughput at s = 1,
+calibrated P25, and |E_pos| (full fetch)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common as Cm
+from repro.data import insert_stream, query_stream
+
+
+def run(ds_name: str = "fineweb-like", quick: bool = False) -> list[str]:
+    rows = []
+    ds0 = Cm.DATASETS[ds_name]
+    n_ins = 40 if quick else 80
+
+    # calibrate P25 once
+    eng, state, ds = Cm.build_engine("navis", ds_name)
+    qs = query_stream(jax.random.PRNGKey(21), ds["cents"], 32,
+                      noise=ds["noise"])
+    spec_cal = eng.calibrate(state, qs)
+    p25 = spec_cal.s_pos
+    rows.append(Cm.fmt_row("fig18a_calibrated", s_search=spec_cal.s_search,
+                           s_pos=p25))
+
+    for s in sorted({1, p25, ds0["e_pos"]}):
+        eng, state, ds = Cm.build_engine("navis", ds_name, s_pos=s)
+        newv = insert_stream(jax.random.PRNGKey(22), ds["cents"], n_ins,
+                             noise=ds["noise"])
+        stats, state = eng.insert_batch(state, newv)
+        wall = Cm.concurrent_walltime_s([stats], threads=32)
+        loads = float(np.asarray(stats.read_requests).mean())
+        rows.append(Cm.fmt_row(f"fig18a_s{s}",
+                               insert_tput=n_ins / wall,
+                               mean_read_requests=loads))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

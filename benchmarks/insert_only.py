@@ -1,0 +1,56 @@
+"""Fig 13: insert-only throughput + latency percentiles + time breakdown
+(incl. the entrance-update share, expected <1%)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as Cm
+from repro.data import insert_stream
+
+
+def run(ds_name: str = "fineweb-like", quick: bool = False) -> list[str]:
+    rows = []
+    n_ins = 60 if quick else 100
+    for system in (("odinann", "navis") if quick else
+                   ("odinann", "odinann_cache", "navis")):
+        eng, state, ds = Cm.build_engine(system, ds_name)
+        newv = insert_stream(jax.random.PRNGKey(5), ds["cents"], n_ins,
+                             noise=ds["noise"])
+        stats, state = eng.insert_batch(state, newv)
+        wall = Cm.concurrent_walltime_s([stats], threads=32)
+        lats = Cm.latencies_s(stats) * 1e3
+        rows.append(Cm.fmt_row(
+            f"fig13a_{system}", insert_tput=n_ins / wall,
+            lat_p50_ms=float(np.percentile(lats, 50)),
+            lat_p90_ms=float(np.percentile(lats, 90)),
+            lat_p99_ms=float(np.percentile(lats, 99))))
+
+        if system == "navis":
+            # breakdown: position-seek reads vs structural writes vs
+            # entrance update (pure in-memory compute — measure its CPU
+            # share directly on the jitted navis_update path)
+            rb = np.asarray(stats.read_bytes, np.float64).sum()
+            wb = np.asarray(stats.write_bytes, np.float64).sum()
+            rounds = np.asarray(stats.serial_rounds, np.float64).sum()
+            seek_t = rounds * Cm.SSD.request_latency + rb / Cm.SSD.read_bw
+            struct_t = wb / Cm.SSD.write_bw
+            # entrance update ~ r_ent sym-PQ rows of compute: model at
+            # 1e9 lookup-adds/s host speed
+            m = eng.spec.pq_m
+            ent_ops = eng.spec.r_ent * (eng.spec.r_ent + 1) * m * n_ins
+            ent_t = ent_ops / 1e9
+            total = seek_t + struct_t + ent_t
+            rows.append(Cm.fmt_row(
+                "fig13b_breakdown_navis",
+                position_seek_share=float(seek_t / total),
+                structural_share=float(struct_t / total),
+                ent_update_share=float(ent_t / total)))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,44 @@
+"""Fig 3: (a) search interference under concurrent updates (OdinANN);
+(b) update-latency breakdown — position seeking vs structural update."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common as Cm
+from repro.data import insert_stream
+
+
+def run(ds_name: str = "fineweb-like", quick: bool = False) -> list[str]:
+    rows = []
+    eng, state, ds = Cm.build_engine("odinann", ds_name)
+
+    only = Cm.search_only_run(eng, state, ds, n_queries=100 if quick else 200)
+    conc = Cm.concurrent_run(eng, only["state"], ds,
+                             rounds=5 if quick else 8)
+    drop = 1.0 - conc["search_qps"] / only["qps"]
+    rows.append(Cm.fmt_row("fig3a_interference",
+                           search_only_qps=only["qps"],
+                           concurrent_qps=conc["search_qps"],
+                           qps_drop_frac=drop))
+
+    # (b) breakdown: position-seek I/O time vs structural-update write time
+    newv = insert_stream(jax.random.PRNGKey(3), ds["cents"],
+                         20 if quick else 50, noise=ds["noise"])
+    stats, _ = eng.insert_batch(conc["state"], newv)
+    rb = np.asarray(stats.read_bytes, np.float64)
+    wb = np.asarray(stats.write_bytes, np.float64)
+    rounds = np.asarray(stats.serial_rounds, np.float64)
+    seek_t = rounds * Cm.SSD.request_latency + rb / Cm.SSD.read_bw
+    struct_t = wb / Cm.SSD.write_bw + np.asarray(
+        stats.write_requests, np.float64) / Cm.SSD.write_iops
+    share = float(seek_t.sum() / (seek_t.sum() + struct_t.sum()))
+    rows.append(Cm.fmt_row("fig3b_breakdown",
+                           position_seek_share=share,
+                           structural_share=1.0 - share))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

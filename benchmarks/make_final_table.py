@@ -1,0 +1,23 @@
+"""Regenerate the final §Roofline table (markdown) from the dry-run dir."""
+import sys
+from pathlib import Path
+
+
+def main():
+    from benchmarks.roofline import table
+    rows = table()
+    out = ["| arch | shape | dominant | compute_s | memory_s | coll_s | useful | mfu_bound |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['dominant']} | "
+            f"{r['compute_s']:.3g} | {r['memory_s']:.3g} | "
+            f"{r['collective_s']:.3g} | {r['useful_ratio']:.2f} | "
+            f"{r['mfu_bound']:.4f} |")
+    text = "\n".join(out) + "\n"
+    Path("experiments/roofline_final.md").write_text(text)
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

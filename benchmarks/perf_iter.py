@@ -1,0 +1,77 @@
+"""One hillclimb iteration: re-lower a cell, re-analyze, log the delta.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter \
+        --cell hymba-1.5b:train_4k --note "pin scan sharding + bf16 stack"
+
+Runs launch/dryrun.py in a subprocess (fresh 512-device jax), re-parses
+the dumped HLO, appends {note, terms} to experiments/perf/<cell>.jsonl and
+prints the delta against the previous entry — the §Perf log's raw data.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+PERF_DIR = Path("experiments/perf")
+
+
+def run_cell(arch: str, shape: str, mesh: str = "pod16x16") -> dict:
+    env = dict(os.environ, PYTHONPATH="src")
+    args = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+            "--shape", shape, "--dump-hlo", "--out", "experiments/dryrun"]
+    if mesh == "pod2x16x16":
+        args.append("--multi-pod")
+    t0 = time.time()
+    out = subprocess.run(args, env=env, capture_output=True, text=True,
+                         timeout=1800)
+    if out.returncode != 0:
+        tail = "\n".join(out.stdout.splitlines()[-5:])
+        raise RuntimeError(f"dryrun failed:\n{tail}\n{out.stderr[-2000:]}")
+    from benchmarks.roofline import cell_roofline
+    r = cell_roofline(f"{arch}__{shape}__{mesh}")
+    r["relower_s"] = round(time.time() - t0, 1)
+    return r
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--note", required=True)
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args(argv)
+    arch, shape = args.cell.split(":")
+
+    r = run_cell(arch, shape, args.mesh)
+    entry = {"note": args.note, "ts": time.strftime("%H:%M:%S"),
+             **{k: r[k] for k in ("compute_s", "memory_s", "collective_s",
+                                  "dominant", "useful_ratio", "mfu_bound",
+                                  "flops", "hbm_bytes", "coll_bytes")}}
+
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    log = PERF_DIR / f"{arch}__{shape}.jsonl"
+    prev = None
+    if log.exists():
+        lines = log.read_text().strip().splitlines()
+        if lines:
+            prev = json.loads(lines[-1])
+    with open(log, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+
+    print(f"== {args.cell} [{args.note}] ==")
+    for k in ("compute_s", "memory_s", "collective_s", "mfu_bound"):
+        line = f"  {k:14s} {entry[k]:.4g}"
+        if prev:
+            delta = (entry[k] / prev[k] - 1.0) if prev[k] else 0.0
+            line += f"   ({delta:+.1%} vs prev)"
+        print(line)
+    print(f"  dominant: {entry['dominant']}, useful={entry['useful_ratio']:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

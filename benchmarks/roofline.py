@@ -1,0 +1,117 @@
+"""§Roofline: three-term roofline per (arch × shape) from the dry-run.
+
+    compute_s    = FLOPs / peak_FLOPs            (197 TFLOP/s bf16, v5e)
+    memory_s     = HBM bytes / HBM bw            (819 GB/s)
+    collective_s = collective bytes / link bw    (50 GB/s/link ICI)
+
+All terms are per-device per-step (the HLO module is the partitioned
+program).  FLOPs and bytes come from the trip-count-corrected HLO parse
+(launch/hlo_analysis.py) because ``cost_analysis()`` counts while bodies
+once; the raw cost_analysis numbers are kept for comparison.  MODEL_FLOPS
+= 6·N_active·tokens (train) / 2·N_active·tokens (inference) per device.
+"""
+from __future__ import annotations
+
+import gzip
+import json
+from pathlib import Path
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s
+LINK_BW = 50e9               # B/s per ICI link
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def model_flops_per_device(arch_id: str, shape_name: str,
+                           devices: int) -> float:
+    from repro import configs as C
+    from repro.models import transformer as T
+    arch = C.get_arch(arch_id)
+    shape = C.SHAPES[shape_name]
+    n_active = T.active_param_count(arch.model)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        total = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        total = 2.0 * n_active * tokens
+    return total / devices
+
+
+def cell_roofline(tag: str) -> dict | None:
+    jf = DRYRUN_DIR / f"{tag}.json"
+    hf = DRYRUN_DIR / f"{tag}.hlo.txt.gz"
+    if not jf.exists():
+        return None
+    meta = json.loads(jf.read_text())
+    if hf.exists():
+        from repro.launch import hlo_analysis as H
+        from repro import configs as C
+        import jax.numpy as jnp
+        cfg = C.get_arch(meta["arch"]).model
+        hlo = gzip.open(hf, "rt").read()
+        a = H.analyze(hlo, bf16_collectives=cfg.dtype == jnp.bfloat16)
+        flops = a["dot_flops"]
+        bytes_ = a["hbm_traffic_bytes"]
+        coll = a["collectives"]["bytes_by_kind"]["total"]
+    else:
+        flops = meta.get("flops") or 0.0
+        bytes_ = meta.get("bytes_accessed") or 0.0
+        coll = meta["collectives"]["bytes_by_kind"]["total"]
+
+    devices = meta["devices"]
+    mf = model_flops_per_device(meta["arch"], meta["shape"], devices)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_ / HBM_BW
+    coll_s = coll / LINK_BW
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", coll_s), key=lambda kv: kv[1])
+    bound = max(compute_s, memory_s, coll_s)
+    return dict(
+        arch=meta["arch"], shape=meta["shape"], mesh=meta["mesh"],
+        devices=devices,
+        flops=flops, hbm_bytes=bytes_, coll_bytes=coll,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dom[0],
+        model_flops=mf,
+        useful_ratio=mf / flops if flops else 0.0,
+        mfu_bound=(mf / PEAK_FLOPS) / bound if bound else 0.0,
+        cost_analysis_flops=meta.get("flops"),
+    )
+
+
+def run(quick: bool = False, mesh_name: str = "pod16x16") -> list[str]:
+    from repro import configs as C
+    rows = []
+    for arch_id, shape_name, _ in C.cells():
+        tag = f"{arch_id}__{shape_name}__{mesh_name}"
+        r = cell_roofline(tag)
+        if r is None:
+            rows.append(f"roofline_{tag},MISSING")
+            continue
+        rows.append(
+            f"roofline,{r['arch']},{r['shape']},{r['dominant']},"
+            f"compute_s={r['compute_s']:.3e},memory_s={r['memory_s']:.3e},"
+            f"collective_s={r['collective_s']:.3e},"
+            f"useful_ratio={r['useful_ratio']:.3f},"
+            f"mfu_bound={r['mfu_bound']:.3f}")
+    return rows
+
+
+def table(mesh_name: str = "pod16x16") -> list[dict]:
+    from repro import configs as C
+    out = []
+    for arch_id, shape_name, _ in C.cells():
+        r = cell_roofline(f"{arch_id}__{shape_name}__{mesh_name}")
+        if r:
+            out.append(r)
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,32 @@
+"""Fig 15: search P90/P99 latency under concurrent updates."""
+from __future__ import annotations
+
+from benchmarks import common as Cm
+
+
+def run(ds_name: str = "fineweb-like", quick: bool = False) -> list[str]:
+    rows = []
+    out = {}
+    for system in ("freshdiskann", "odinann", "navis"):
+        eng, state, ds = Cm.build_engine(system, ds_name)
+        res = Cm.concurrent_run(eng, state, ds, rounds=5 if quick else 8)
+        out[system] = res
+        rows.append(Cm.fmt_row(f"fig15_{system}",
+                               p90_ms=res["search_lat_p90_ms"],
+                               p99_ms=res["search_lat_p99_ms"]))
+    rows.append(Cm.fmt_row(
+        "fig15_navis_reduction",
+        p90_vs_fresh=1 - out["navis"]["search_lat_p90_ms"]
+        / out["freshdiskann"]["search_lat_p90_ms"],
+        p99_vs_fresh=1 - out["navis"]["search_lat_p99_ms"]
+        / out["freshdiskann"]["search_lat_p99_ms"],
+        p90_vs_odin=1 - out["navis"]["search_lat_p90_ms"]
+        / out["odinann"]["search_lat_p90_ms"],
+        p99_vs_odin=1 - out["navis"]["search_lat_p99_ms"]
+        / out["odinann"]["search_lat_p99_ms"]))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

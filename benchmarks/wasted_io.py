@@ -1,0 +1,47 @@
+"""Fig 4(a): per-insertion read/write volume decomposition under the
+packed layout — useful vector / wasted vector / edgelist / padding — as
+|E_pos| grows past R (the position-seeking regime)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from benchmarks import common as Cm
+from repro.data import insert_stream
+
+
+def run(ds_name: str = "fineweb-like", quick: bool = False) -> list[str]:
+    rows = []
+    ds0 = Cm.DATASETS[ds_name]
+    n_ins = 15 if quick else 40
+    for e_pos in (ds0["r"], int(ds0["r"] * 1.35), int(ds0["r"] * 1.7)):
+        eng, state, ds = Cm.build_engine("odinann", ds_name, e_pos=e_pos)
+        ctr0 = state.ctr_insert
+        newv = insert_stream(jax.random.PRNGKey(4), ds["cents"], n_ins,
+                             noise=ds["noise"])
+        stats, state = eng.insert_batch(state, newv)
+        c = jax.tree.map(lambda a, b: (np.asarray(b) - np.asarray(a))
+                         / n_ins, ctr0, state.ctr_insert)
+        read_total = (c.edge_bytes_read + c.useful_vec_bytes_read +
+                      c.wasted_vec_bytes_read + c.pad_bytes_read)
+        write_total = (c.edge_bytes_written + c.vec_bytes_written +
+                       c.wasted_vec_bytes_written + c.pad_bytes_written)
+        rows.append(Cm.fmt_row(
+            f"fig4a_epos{e_pos}",
+            read_KiB=float(read_total / 1024),
+            read_useful_vec_frac=float(c.useful_vec_bytes_read / read_total),
+            read_wasted_vec_frac=float(c.wasted_vec_bytes_read / read_total),
+            read_edge_frac=float(c.edge_bytes_read / read_total),
+            read_pad_frac=float(c.pad_bytes_read / read_total),
+            write_KiB=float(write_total / 1024),
+            write_wasted_vec_frac=float(
+                c.wasted_vec_bytes_written / write_total),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

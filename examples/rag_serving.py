@@ -1,0 +1,67 @@
+"""RAG serving: an assigned-architecture LM embeds queries; NAVIS
+retrieves.  The LM side runs the same serve_step the multi-pod dry-run
+lowers at scale; the retrieval side is the NAVIS engine.
+
+    PYTHONPATH=src python examples/rag_serving.py --arch qwen2-0.5b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.core import Engine, preset
+from repro.data import make_clustered
+from repro.models import transformer as T
+
+
+def embed_queries(cfg, params, token_batches):
+    """Mean-pooled last-hidden-state embeddings from the smoke LM."""
+    outs = []
+    for tokens in token_batches:
+        h = T.forward(cfg, params, tokens, remat=False)
+        outs.append(h.mean(axis=1))                    # [B, D]
+    return jnp.concatenate(outs).astype(jnp.float32)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b", choices=list(C.ARCH_IDS))
+    args = ap.parse_args()
+
+    arch = C.get_arch(args.arch)
+    cfg = arch.smoke
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    dim = cfg.d_model
+
+    # corpus: "documents" embedded by the same LM (random token docs)
+    print(f"embedding 512 documents with {args.arch} (smoke config, "
+          f"d={dim})...")
+    doc_tokens = [jax.random.randint(jax.random.fold_in(key, i),
+                                     (64, 32), 0, cfg.vocab_size, jnp.int32)
+                  for i in range(8)]
+    docs = embed_queries(cfg, params, doc_tokens)
+
+    spec = preset("navis", dim=dim, r=16, n_max=docs.shape[0] + 64,
+                  e_search=32, e_pos=40, pq_m=min(32, dim // 2),
+                  cache_capacity_pages=64, max_hops=48)
+    eng = Engine(spec)
+    state = eng.build(jax.random.fold_in(key, 99), docs)
+    print(f"indexed {int(state.store.count)} docs")
+
+    # serve: embed a query batch, retrieve top-5 docs each
+    q_tokens = jax.random.randint(jax.random.fold_in(key, 1234), (4, 32),
+                                  0, cfg.vocab_size, jnp.int32)
+    t0 = time.time()
+    q_emb = embed_queries(cfg, params, [q_tokens])
+    ids, dists, stats, state = eng.search_batch(state, q_emb)
+    print(f"retrieved in {time.time()-t0:.2f}s")
+    for i in range(4):
+        print(f"  query {i}: docs {ids[i][:5].tolist()} "
+              f"(d={[round(float(x),1) for x in dists[i][:5]]})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.store import latest_step, load, load_latest, save
+
+__all__ = ["latest_step", "load", "load_latest", "save"]

@@ -1,0 +1,80 @@
+"""Architecture registry: ``--arch <id>`` resolution + per-cell input specs.
+
+Every assigned architecture is importable here; ``get_arch`` accepts the
+dashed public id.  ``input_specs`` builds the ShapeDtypeStruct stand-ins for
+a (arch × shape) dry-run cell — weak-type-correct, shardable, and never
+allocating device memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec, ShapeSpec, SHAPES  # noqa: F401
+from repro.configs import (  # noqa: F401
+    arctic_480b,
+    falcon_mamba_7b,
+    gemma3_1b,
+    gemma_2b,
+    hymba_1_5b,
+    llama_3_2_vision_90b,
+    moonshot_v1_16b_a3b,
+    qwen1_5_0_5b,
+    qwen2_0_5b,
+    whisper_medium,
+)
+
+_MODULES = (
+    hymba_1_5b, moonshot_v1_16b_a3b, arctic_480b, whisper_medium,
+    qwen1_5_0_5b, qwen2_0_5b, gemma3_1b, gemma_2b, falcon_mamba_7b,
+    llama_3_2_vision_90b,
+)
+
+REGISTRY: dict[str, ArchSpec] = {m.ARCH.arch_id: m.ARCH for m in _MODULES}
+
+ARCH_IDS = tuple(REGISTRY)
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {', '.join(ARCH_IDS)}")
+    return REGISTRY[arch_id]
+
+
+def cells(include_skipped: bool = False):
+    """Every assigned (arch × shape) cell, with skip reasons."""
+    for arch_id, arch in REGISTRY.items():
+        for shape_name, shape in SHAPES.items():
+            reason = arch.skip_shapes.get(shape_name)
+            if reason is None or include_skipped:
+                yield arch_id, shape_name, reason
+
+
+def input_specs(arch: ArchSpec, shape: ShapeSpec, *, smoke: bool = False,
+                rules=None):
+    """ShapeDtypeStruct stand-ins for one dry-run cell.
+
+    Returns (kwargs-for-step-fn).  For decode cells the KV cache structs are
+    included (they are donated inputs of serve_step).
+    """
+    from repro.models import transformer as T
+    from repro.models.layers import NO_SHARD
+
+    cfg = arch.smoke if smoke else arch.model
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    specs: dict = {}
+    if shape.kind in ("train", "prefill"):
+        specs["tokens"] = f((B, S), jnp.int32)
+        if cfg.encoder_layers:
+            specs["cross_src"] = f((B, cfg.cross_seq, cfg.d_model),
+                                   cfg.dtype)
+        elif cfg.cross_seq:
+            specs["cross_src"] = f((B, cfg.cross_seq, cfg.d_model),
+                                   cfg.dtype)
+    else:  # decode: one new token against an S-long cache
+        specs["tokens"] = f((B, 1), jnp.int32)
+        specs["pos"] = f((), jnp.int32)
+        specs["cache"] = T.cache_shapes(cfg, B, S, rules or NO_SHARD)
+    return specs

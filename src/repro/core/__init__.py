@@ -1,0 +1,21 @@
+"""NAVIS core: the paper's contribution as a composable JAX system.
+
+Public API:
+    EngineSpec / Engine / preset / PRESETS      (engine.py)
+    GraphStore / LayoutSpec                     (layout.py)
+    build_graph / brute_force_topk / recall_at_k (graph.py)
+    SSDModel / HBMModel / IOCounters            (iomodel.py)
+"""
+from repro.core.engine import (Engine, EngineSpec, EngineState, OpStats,
+                               PRESETS, preset)
+from repro.core.graph import (brute_force_topk, build_graph, check_invariants,
+                              medoid, recall_at_k, robust_prune)
+from repro.core.iomodel import HBMModel, IOCounters, PAGE_BYTES, SSDModel
+from repro.core.layout import GraphStore, LayoutSpec, empty_store
+
+__all__ = [
+    "Engine", "EngineSpec", "EngineState", "OpStats", "PRESETS", "preset",
+    "brute_force_topk", "build_graph", "check_invariants", "medoid",
+    "recall_at_k", "robust_prune", "HBMModel", "IOCounters", "PAGE_BYTES",
+    "SSDModel", "GraphStore", "LayoutSpec", "empty_store",
+]

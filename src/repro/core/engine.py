@@ -1,0 +1,522 @@
+"""The NAVIS engine: composition of layout × rerank × entrance × cache ×
+update-path.  Every paper baseline is a configuration, not a fork:
+
+=================  =========  ======  ========  ==============  ===========
+system             layout     rerank  entrance  cache           update path
+=================  =========  ======  ========  ==============  ===========
+freshdiskann       packed     full    static    none            buffered
+odinann            packed     full    static    none            inplace
+odinann_cache      packed     full    static    navis (packed)  inplace
+layout_only        decoupled  full    static    none            inplace
+sel_vec            decoupled  casr    static    none            inplace
+navis              decoupled  casr    dynamic   navis           inplace
+=================  =========  ======  ========  ==============  ===========
+
+All per-op functions are jitted pure functions over :class:`EngineState`;
+batches run under ``lax.scan`` so the cache/entrance/counter state threads
+exactly as a concurrent run would interleave it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import cache as cache_mod
+from repro.core import casr as casr_mod
+from repro.core import entrance as ent_mod
+from repro.core import graph as graph_mod
+from repro.core import insert as insert_mod
+from repro.core import pq as pq_mod
+from repro.core import search as search_mod
+from repro.core.iomodel import IOCounters, PAGE_BYTES, merge_counters
+from repro.core.layout import GraphStore, LayoutSpec
+
+INF = jnp.float32(3.4e38)
+
+
+# ---------------------------------------------------------------------------
+# Specification
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Static engine configuration (hashable — one jit per spec)."""
+
+    dim: int
+    r: int = 96
+    n_max: int = 0                      # capacity incl. future inserts
+    pq_m: int = 32                      # PQ subquantizers
+    layout: str = "decoupled"           # packed | decoupled
+    rerank: str = "casr"                # full | casr
+    entrance: str = "dynamic"           # none | static | dynamic
+    cache_policy: str = "navis"         # none | navis | lru | clock | lfu
+    update_path: str = "inplace"        # inplace | buffered
+    e_search: int = 40
+    e_pos: int = 100
+    k: int = 10
+    beam_width: int = 4
+    max_hops: int = 256
+    s_search: int = 4                   # CASR group size (search path)
+    s_pos: int = 8                      # CASR group size (position seeking)
+    cache_capacity_pages: int = 1024
+    ent_frac: float = 0.01
+    r_ent: int = 32
+    n_entry: int = 10
+    ent_pool: int = 32
+    buffer_frac: float = 0.06           # FreshDiskANN merge threshold
+    buffer_max: int = 4096
+
+    @property
+    def lspec(self) -> LayoutSpec:
+        return LayoutSpec(kind=self.layout, dim=self.dim, r=self.r)
+
+    def with_(self, **kw) -> "EngineSpec":
+        return dataclasses.replace(self, **kw)
+
+
+PRESETS = {
+    "freshdiskann": dict(layout="packed", rerank="full", entrance="static",
+                         cache_policy="none", update_path="buffered"),
+    "odinann": dict(layout="packed", rerank="full", entrance="static",
+                    cache_policy="none", update_path="inplace"),
+    "odinann_cache": dict(layout="packed", rerank="full", entrance="static",
+                          cache_policy="navis", update_path="inplace"),
+    "layout_only": dict(layout="decoupled", rerank="full", entrance="static",
+                        cache_policy="none", update_path="inplace"),
+    "sel_vec": dict(layout="decoupled", rerank="casr", entrance="static",
+                    cache_policy="none", update_path="inplace"),
+    "navis": dict(layout="decoupled", rerank="casr", entrance="dynamic",
+                  cache_policy="navis", update_path="inplace"),
+}
+
+
+def preset(name: str, dim: int, **overrides) -> EngineSpec:
+    kw = dict(PRESETS[name])
+    kw.update(overrides)
+    return EngineSpec(dim=dim, **kw)
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EngineState:
+    store: GraphStore
+    codes: jax.Array                 # [N_max, M] uint8
+    ent: ent_mod.EntranceGraph
+    cache: cache_mod.CacheState
+    tombstone: jax.Array             # [N_max] bool — deleted vertices
+    default_entries: jax.Array       # [n_entry] fallback entry ids
+    ctr_search: IOCounters
+    ctr_insert: IOCounters
+    buf_vecs: jax.Array              # [B_max, D] FreshDiskANN memory buffer
+    buf_count: jax.Array
+    n_deleted: jax.Array
+
+    @property
+    def live_count(self):
+        return self.store.count - self.n_deleted
+
+
+class OpStats(NamedTuple):
+    """Per-operation I/O summary for latency/throughput modelling."""
+    read_requests: jax.Array
+    read_bytes: jax.Array
+    write_requests: jax.Array
+    write_bytes: jax.Array
+    serial_rounds: jax.Array      # dependent I/O rounds (hops + rerank)
+    cache_hits: jax.Array
+    cache_misses: jax.Array
+
+
+def _delta_stats(before: IOCounters, after: IOCounters,
+                 rounds) -> OpStats:
+    return OpStats(
+        read_requests=after.read_requests - before.read_requests,
+        read_bytes=after.total_read_bytes() - before.total_read_bytes(),
+        write_requests=after.write_requests - before.write_requests,
+        write_bytes=after.total_write_bytes() - before.total_write_bytes(),
+        serial_rounds=rounds,
+        cache_hits=after.cache_hits - before.cache_hits,
+        cache_misses=after.cache_misses - before.cache_misses)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class Engine:
+    """Composable GVS engine.  Build once, then thread `EngineState`
+    through jitted ``search`` / ``insert`` / ``delete`` ops."""
+
+    def __init__(self, spec: EngineSpec):
+        self.spec = spec
+        self.codec: Optional[pq_mod.PQCodec] = None
+        self._sym: Optional[jax.Array] = None
+        self.search = jax.jit(self._search)
+        self.insert = jax.jit(self._insert)
+        self.search_batch = jax.jit(self._search_batch)
+        self.insert_batch = jax.jit(self._insert_batch)
+        self.merge = jax.jit(self._merge)
+
+    # -- construction -------------------------------------------------------
+
+    def build(self, key: jax.Array, base_vectors: jax.Array,
+              *, build_block: int = 64, build_e_pos: int = 64,
+              alpha: float = 1.2, shared=None) -> EngineState:
+        """Build (or adopt) the base index.
+
+        ``shared``: an optional ``(codec, codes, store)`` bundle from a
+        previous build — the proximity graph is layout-independent, so
+        benchmark sweeps build it once and re-page it per engine config
+        (packed vs decoupled page maps differ; edges/vectors do not).
+        """
+        spec = self.spec
+        n_base, dim = base_vectors.shape
+        assert dim == spec.dim
+        n_max = spec.n_max or n_base
+        k_pq, k_ent, k_build = jax.random.split(key, 3)
+
+        if shared is not None:
+            self.codec, codes, store0 = shared
+            self._sym = pq_mod.sym_tables(self.codec)
+            from repro.core.layout import assign_initial_pages
+            store = assign_initial_pages(store0, spec.lspec)
+        else:
+            if self.codec is None:
+                # PQ codec from a base sample; codes for the full capacity.
+                # A pre-installed codec is kept (sharded deployments train
+                # ONE codec on the global corpus — per-shard codecs would
+                # make PQ distances incomparable across shards).
+                sample = base_vectors[
+                    jax.random.choice(k_pq, n_base, (min(n_base, 4096),),
+                                      replace=False)]
+                self.codec = pq_mod.train_pq(k_pq, sample, spec.pq_m)
+            self._sym = pq_mod.sym_tables(self.codec)
+            codes = jnp.zeros((n_max, spec.pq_m), jnp.uint8)
+            codes = codes.at[:n_base].set(pq_mod.encode(self.codec,
+                                                        base_vectors))
+
+            store = graph_mod.build_graph(
+                k_build, jnp.pad(base_vectors,
+                                 ((0, n_max - n_base), (0, 0))),
+                n_base, spec.lspec, self.codec, codes, n_max=n_max,
+                e_pos=build_e_pos, block=build_block, alpha=alpha)
+
+        c_max = max(int(spec.ent_frac * n_max * 2), 64)
+        if spec.entrance == "none":
+            ent = ent_mod.empty_entrance(c_max, spec.r_ent, n_max)
+        else:
+            ent = ent_mod.build_entrance(
+                k_ent, codes, self._sym, n_base, c_max=c_max,
+                r_ent=spec.r_ent, sample_frac=spec.ent_frac, n_max=n_max)
+
+        cache = cache_mod.init_cache(
+            store.page_live.shape[0], spec.cache_capacity_pages,
+            spec.cache_policy, jax.random.fold_in(key, 7))
+        med = graph_mod.medoid(base_vectors, n_base)
+        default_entries = jnp.concatenate([
+            med[None], jax.random.choice(
+                jax.random.fold_in(key, 9), n_base,
+                (spec.n_entry - 1,)).astype(jnp.int32)])
+
+        return EngineState(
+            store=store, codes=codes, ent=ent, cache=cache,
+            tombstone=jnp.zeros((n_max,), bool),
+            default_entries=default_entries,
+            ctr_search=IOCounters.zeros(), ctr_insert=IOCounters.zeros(),
+            buf_vecs=jnp.zeros((spec.buffer_max, dim), jnp.float32),
+            buf_count=jnp.zeros((), jnp.int32),
+            n_deleted=jnp.zeros((), jnp.int32))
+
+    def bundle(self, state: EngineState):
+        """(codec, codes, store) — reusable across engine configs."""
+        return (self.codec, state.codes, state.store)
+
+    # -- entry-point selection ----------------------------------------------
+
+    def _entries(self, state: EngineState, lut: jax.Array):
+        """① entry selection.  Returns (entry_ids [n_entry], e_ent [pool])."""
+        spec = self.spec
+        if spec.entrance == "none":
+            return state.default_entries, jnp.full(
+                (spec.ent_pool,), -1, jnp.int32)
+
+        def use_ent(_):
+            entries, e_ent, _ = search_mod.entrance_search(
+                state.ent, lut, state.codes, n_entry=spec.n_entry,
+                pool_size=spec.ent_pool)
+            return entries, e_ent
+
+        def use_default(_):
+            return state.default_entries, jnp.full(
+                (spec.ent_pool,), -1, jnp.int32)
+
+        return lax.cond(state.ent.count > 0, use_ent, use_default, None)
+
+    # -- classification (Fig 4a) --------------------------------------------
+
+    def _reclassify(self, counters: IOCounters, q, pool_ids, store,
+                    loaded_count) -> IOCounters:
+        """Move the CASR-classifier 'useful' share of provisionally-wasted
+        vector reads into the useful bucket (packed piggybacking & the
+        decoupled-full strawman both over-charge wasted)."""
+        spec = self.spec
+        n_useful = casr_mod.casr_stop_point(
+            q, store.vectors, pool_ids, k=spec.k, s=1)
+        n_useful = jnp.minimum(n_useful, loaded_count).astype(jnp.int64)
+        moved = n_useful * spec.lspec.vector_bytes
+        moved = jnp.minimum(moved, counters.wasted_vec_bytes_read)
+        return dataclasses.replace(
+            counters,
+            useful_vec_bytes_read=counters.useful_vec_bytes_read + moved,
+            wasted_vec_bytes_read=counters.wasted_vec_bytes_read - moved)
+
+    # -- search --------------------------------------------------------------
+
+    def _search(self, state: EngineState, q: jax.Array):
+        """Top-k search.  Returns (ids [k], dists [k], stats, state)."""
+        spec = self.spec
+        ctr0 = IOCounters.zeros()
+        lut = pq_mod.adc_lut(self.codec, q)
+        entries, _ = self._entries(state, lut)
+
+        res = search_mod.disk_traverse(
+            state.store, spec.lspec, lut, state.codes, state.cache, ctr0,
+            entries, pool_size=spec.e_search, beam_width=spec.beam_width,
+            max_hops=spec.max_hops)
+        cache, ctr = res.cache, res.counters
+        pool = jnp.where(state.tombstone[jnp.maximum(res.pool_ids, 0)],
+                         -1, res.pool_ids)
+
+        if spec.rerank == "casr":
+            cres = casr_mod.casr_rerank(state.store, spec.lspec, q, pool,
+                                        ctr, k=spec.k, s=spec.s_search)
+            ids, dists, ctr = cres.topk_ids, cres.topk_d, cres.counters
+            rounds = res.hops + cres.rerank_rounds
+        else:
+            sorted_ids, sorted_d, _, ctr = search_mod.full_rerank(
+                state.store, spec.lspec, q, res._replace(pool_ids=pool),
+                ctr, k=spec.k)
+            ids, dists = sorted_ids, sorted_d
+            extra = 0 if spec.layout == "packed" else 1
+            rounds = res.hops + 1 + extra
+            ctr = self._reclassify(ctr, q, pool, state.store,
+                                   (pool >= 0).sum())
+
+        # FreshDiskANN: merge in-memory buffer hits (exact, no I/O)
+        if spec.update_path == "buffered":
+            ids, dists = self._merge_buffer_hits(state, q, ids, dists)
+
+        stats = _delta_stats(ctr0, ctr, rounds)
+        state = dataclasses.replace(
+            state, cache=cache,
+            ctr_search=merge_counters(state.ctr_search, ctr))
+        return ids, dists, stats, state
+
+    def _merge_buffer_hits(self, state, q, ids, dists):
+        spec = self.spec
+        bvalid = jnp.arange(spec.buffer_max) < state.buf_count
+        bd = jnp.where(bvalid, pq_mod.exact_l2(q, state.buf_vecs), INF)
+        # buffer ids are virtual: n_max + slot (not yet in the graph)
+        bids = (state.store.n_max + jnp.arange(spec.buffer_max)).astype(
+            jnp.int32)
+        all_d = jnp.concatenate([jnp.where(ids >= 0, dists, INF), bd])
+        all_i = jnp.concatenate([ids, bids])
+        neg, sel = lax.top_k(-all_d, spec.k)
+        return jnp.where(neg > -INF, all_i[sel], -1), -neg
+
+    # -- insert ---------------------------------------------------------------
+
+    def _insert(self, state: EngineState, v: jax.Array):
+        """One insertion.  Returns (stats, state)."""
+        if self.spec.update_path == "buffered":
+            return self._insert_buffered(state, v)
+        return self._insert_inplace(state, v)
+
+    def _insert_inplace(self, state: EngineState, v: jax.Array,
+                        page_seen=None, charge_bulk: bool = False):
+        spec = self.spec
+        ctr0 = IOCounters.zeros()
+        lut = pq_mod.adc_lut(self.codec, v)
+        entries, e_ent = self._entries(state, lut)
+
+        new_code = pq_mod.encode(self.codec, v[None])[0]
+        codes = state.codes.at[state.store.count].set(new_code)
+
+        ires = insert_mod.insert_vertex(
+            state.store, spec.lspec, self.codec, codes, self._sym,
+            state.cache, ctr0, v, entries, e_pos=spec.e_pos, k=spec.k,
+            s=spec.s_pos, rerank=spec.rerank, beam_width=spec.beam_width,
+            max_hops=spec.max_hops, tombstone=state.tombstone,
+            page_seen=page_seen)
+        ctr = ires.counters
+        if spec.rerank == "full":
+            ctr = self._reclassify(ctr, v, ires.pool_ids, ires.store,
+                                   (ires.pool_ids >= 0).sum())
+
+        ent = state.ent
+        if spec.entrance == "dynamic":
+            ent = ent_mod.navis_update(
+                ent, ires.new_id, new_code, ires.pool_ids, e_ent,
+                ires.store.count, codes, self._sym,
+                r_ent_frac=spec.ent_frac)
+
+        stats = _delta_stats(ctr0, ctr, ires.hops + ires.rerank_rounds)
+        state = dataclasses.replace(
+            state, store=ires.store, codes=codes, ent=ent, cache=ires.cache,
+            ctr_insert=merge_counters(state.ctr_insert, ctr))
+        return stats, state, ires.page_seen
+
+    def _insert_buffered(self, state: EngineState, v: jax.Array):
+        """FreshDiskANN path: append to the host buffer (zero storage I/O);
+        the caller triggers :meth:`merge` at the 6% threshold."""
+        slot = state.buf_count
+        state = dataclasses.replace(
+            state,
+            buf_vecs=state.buf_vecs.at[slot].set(v),
+            buf_count=state.buf_count + 1)
+        zeros = jnp.zeros((), jnp.int64)
+        stats = OpStats(zeros, zeros, zeros, zeros,
+                        jnp.zeros((), jnp.int32), zeros, zeros)
+        return stats, state, jnp.zeros_like(state.store.page_live,
+                                            dtype=bool)
+
+    def needs_merge(self, state: EngineState) -> jax.Array:
+        thresh = jnp.maximum(
+            (self.spec.buffer_frac *
+             state.store.count.astype(jnp.float32)).astype(jnp.int32), 1)
+        return (state.buf_count >= jnp.minimum(thresh,
+                                               self.spec.buffer_max)) & \
+            (state.buf_count > 0)
+
+    def _merge(self, state: EngineState):
+        """FreshDiskANN StreamingMerge: position-seek every buffered vector
+        (reads amortised through one shared page buffer), wire them, then
+        stream-rewrite the whole on-disk index into the double buffer
+        (full-index read + write — the paper's documented write overhead).
+        Returns (merge_stats, state)."""
+        spec = self.spec
+        ctr_before = state.ctr_insert
+        page_seen0 = jnp.zeros_like(state.store.page_live, dtype=bool)
+
+        def step(carry, i):
+            state, page_seen = carry
+
+            def do(args):
+                state, page_seen = args
+                _, state, seen = self._insert_inplace(
+                    state, state.buf_vecs[i], page_seen=page_seen)
+                return state, page_seen | seen
+
+            state, page_seen = lax.cond(
+                i < state.buf_count, do, lambda a: a, (state, page_seen))
+            return (state, page_seen), None
+
+        (state, _), _ = lax.scan(step, (state, page_seen0),
+                                 jnp.arange(spec.buffer_max))
+
+        # stream-rewrite: every live page read once + written once
+        lspec = spec.lspec
+        per = (lspec.packed_per_page if spec.layout == "packed"
+               else lspec.edgelists_per_page)
+        n_pages = (-(-state.store.count // per)).astype(jnp.int64)
+        stream_bytes = n_pages * PAGE_BYTES
+        ctr = dataclasses.replace(
+            state.ctr_insert,
+            read_requests=state.ctr_insert.read_requests + n_pages,
+            write_requests=state.ctr_insert.write_requests + n_pages,
+            pad_bytes_read=state.ctr_insert.pad_bytes_read + stream_bytes,
+            pad_bytes_written=state.ctr_insert.pad_bytes_written +
+            stream_bytes)
+        state = dataclasses.replace(state, ctr_insert=ctr,
+                                    buf_count=jnp.zeros((), jnp.int32))
+        stats = _delta_stats(ctr_before, state.ctr_insert,
+                             jnp.int32(0))
+        return stats, state
+
+    # -- delete (paper §11) ---------------------------------------------------
+
+    def delete(self, state: EngineState, vid: jax.Array) -> EngineState:
+        """Tombstone ``vid``: removed from results and future wiring; the
+        entrance graph drops its member.  Bulk compaction happens at the
+        merge threshold (not modelled — deletion is benign per OdinANN)."""
+        ent = state.ent
+        eslot = ent.main_to_ent[vid]
+
+        def drop_ent(ent):
+            return dataclasses.replace(
+                ent,
+                ids=ent.ids.at[jnp.maximum(eslot, 0)].set(
+                    jnp.where(eslot >= 0, -1, ent.ids[jnp.maximum(eslot,
+                                                                  0)])),
+                main_to_ent=ent.main_to_ent.at[vid].set(-1))
+
+        ent = lax.cond(eslot >= 0, drop_ent, lambda e: e, ent)
+        return dataclasses.replace(
+            state, ent=ent,
+            tombstone=state.tombstone.at[vid].set(True),
+            n_deleted=state.n_deleted + 1)
+
+    # -- batches --------------------------------------------------------------
+
+    def _search_batch(self, state: EngineState, queries: jax.Array):
+        """Sequential (state-threading) batch search under lax.scan."""
+        def step(state, q):
+            ids, dists, stats, state = self._search(state, q)
+            return state, (ids, dists, stats)
+
+        state, (ids, dists, stats) = lax.scan(step, state, queries)
+        return ids, dists, stats, state
+
+    def _insert_batch(self, state: EngineState, vectors: jax.Array):
+        def step(state, v):
+            stats, state, _ = self._insert(state, v)
+            return state, stats
+
+        state, stats = lax.scan(step, state, vectors)
+        return stats, state
+
+    # -- calibration (paper §5.2 warm-up) -------------------------------------
+
+    def calibrate(self, state: EngineState, queries: jax.Array) -> EngineSpec:
+        """Set s_search / s_pos from the P25 of the vectors-to-converge
+        distribution over ~100 warm-up queries.  Returns the updated spec
+        (also installed on self, re-jitting the ops)."""
+        spec = self.spec
+
+        @functools.partial(jax.jit, static_argnames=("pool_size",))
+        def pools(state, queries, pool_size):
+            def one(q):
+                lut = pq_mod.adc_lut(self.codec, q)
+                entries, _ = self._entries(state, lut)
+                res = search_mod.disk_traverse(
+                    state.store, spec.lspec, lut, state.codes, state.cache,
+                    IOCounters.zeros(), entries, pool_size=pool_size,
+                    beam_width=spec.beam_width, max_hops=spec.max_hops)
+                return res.pool_ids
+            return jax.lax.map(one, queries, batch_size=16)
+
+        s_vals = {}
+        for name, pool_size in (("s_search", spec.e_search),
+                                ("s_pos", spec.e_pos)):
+            ps = pools(state, queries, pool_size)
+            s = casr_mod.calibrate_group_size(
+                jax.random.PRNGKey(0), state.store.vectors, ps, queries,
+                k=spec.k)
+            s_vals[name] = max(s, 1)
+        new_spec = spec.with_(**s_vals)
+        self.spec = new_spec
+        self.search = jax.jit(self._search)
+        self.insert = jax.jit(self._insert)
+        self.search_batch = jax.jit(self._search_batch)
+        self.insert_batch = jax.jit(self._insert_batch)
+        self.merge = jax.jit(self._merge)
+        return new_spec

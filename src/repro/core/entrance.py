@@ -1,0 +1,195 @@
+"""Entrance graph: build + NAVIS-update (Algorithm 2).
+
+The entrance graph is a small in-memory sample (~1%) of the proximity graph
+with reduced out-degree ``R_ent`` that seeds every traversal with well-placed
+entry points.  Prior systems freeze it after build; NAVIS keeps it fresh by
+piggybacking each on-disk insertion's already-computed explored sets:
+
+    E_inter = E_pos ∩ G_ent         (on-disk pool ∩ entrance members)
+    q.nbr   = E_inter ⊕ E_ent       (fill to R_ent, E_inter first)
+    reciprocal links + prune         (drop farthest by symmetric-PQ distance)
+
+The paper's lock section becomes a functional state swap (DESIGN.md §2): the
+whole update is a pure function ``EntranceGraph -> EntranceGraph`` executed
+inside the insert jit, so readers always see a consistent snapshot.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import pq as pq_mod
+
+INF = jnp.float32(3.4e38)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EntranceGraph:
+    """Fixed-capacity in-memory entrance graph.
+
+    ids[c]         : main-graph vertex id of entrance vertex c (-1 empty)
+    edges[c]       : int32 [C_max, R_ent] indices into ``ids`` (-1 pad)
+    count          : live entries
+    main_to_ent[v] : inverse map main id -> entrance index (-1 absent);
+                     sized to the main graph's N_max
+    """
+
+    ids: jax.Array
+    edges: jax.Array
+    count: jax.Array
+    main_to_ent: jax.Array
+
+    @property
+    def c_max(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def r_ent(self) -> int:
+        return self.edges.shape[1]
+
+
+def empty_entrance(c_max: int, r_ent: int, n_max: int) -> EntranceGraph:
+    return EntranceGraph(
+        ids=jnp.full((c_max,), -1, jnp.int32),
+        edges=jnp.full((c_max, r_ent), -1, jnp.int32),
+        count=jnp.zeros((), jnp.int32),
+        main_to_ent=jnp.full((n_max,), -1, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Build (sample + in-memory kNN on PQ codes)
+# ---------------------------------------------------------------------------
+
+def build_entrance(key: jax.Array, codes: jax.Array, sym_tables: jax.Array,
+                   n_live: int, *, c_max: int, r_ent: int,
+                   sample_frac: float = 0.01,
+                   n_max: int | None = None) -> EntranceGraph:
+    """Sample ``sample_frac`` of the live vertices and kNN-link them.
+
+    Distances use symmetric PQ (code-to-code) so the build never touches the
+    slow tier — matching the paper's "in-memory entrance graph" premise.
+    The medoid-most vertex (min mean distance) is swapped to index 0, which
+    ``entrance_search`` uses as its seed.
+    """
+    n_max = n_max or codes.shape[0]
+    n_sample = max(min(int(n_live * sample_frac), c_max), min(n_live, 2))
+    perm = jax.random.permutation(key, n_live)[:n_sample]
+    perm = perm.astype(jnp.int32)
+
+    sample_codes = codes[perm]                                  # [S, M]
+    d = pq_mod.sym_distance_matrix(sym_tables, sample_codes)    # [S, S]
+    d = d + jnp.eye(n_sample) * INF
+    # medoid to slot 0
+    med = jnp.argmin(d.sum(axis=1))
+    swap = jnp.arange(n_sample).at[0].set(med).at[med].set(0)
+    perm = perm[swap]
+    d = d[swap][:, swap]
+
+    k = min(r_ent, n_sample - 1)
+    _, nbr = lax.top_k(-d, k)                                   # [S, k]
+    edges = jnp.full((c_max, r_ent), -1, jnp.int32)
+    edges = edges.at[:n_sample, :k].set(nbr.astype(jnp.int32))
+
+    ids = jnp.full((c_max,), -1, jnp.int32).at[:n_sample].set(perm)
+    main_to_ent = jnp.full((n_max,), -1, jnp.int32).at[perm].set(
+        jnp.arange(n_sample, dtype=jnp.int32))
+    return EntranceGraph(ids=ids, edges=edges,
+                         count=jnp.asarray(n_sample, jnp.int32),
+                         main_to_ent=main_to_ent)
+
+
+# ---------------------------------------------------------------------------
+# NAVIS-update (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def navis_update(ent: EntranceGraph, new_id: jax.Array, new_code: jax.Array,
+                 e_pos: jax.Array, e_ent: jax.Array, graph_count: jax.Array,
+                 codes: jax.Array, sym_tables: jax.Array, *,
+                 r_ent_frac: float = 0.01) -> EntranceGraph:
+    """Algorithm 2.  All inputs are main-graph ids; -1 = padding.
+
+    e_pos : [P] on-disk explored set from position seeking (PQ-sorted).
+    e_ent : [E] entrance-graph explored set from entry-point selection.
+    Triggered only while |G_ent| < r_ent_frac * |G| and capacity remains.
+    """
+    r_ent = ent.r_ent
+    want = (ent.count.astype(jnp.float32)
+            < r_ent_frac * graph_count.astype(jnp.float32))
+    want &= ent.count < ent.c_max
+    # a vertex already promoted must not be promoted twice
+    want &= ent.main_to_ent[jnp.maximum(new_id, 0)] < 0
+    want &= new_id >= 0
+
+    def do_update(ent: EntranceGraph) -> EntranceGraph:
+        # --- line 2: E_inter = E_pos ∩ G_ent (as entrance indices) ---------
+        pos_ent = jnp.where(e_pos >= 0,
+                            ent.main_to_ent[jnp.maximum(e_pos, 0)], -1)
+        # --- line 3: neighbor candidates: E_inter first, then E_ent --------
+        ent_ent = jnp.where(e_ent >= 0,
+                            ent.main_to_ent[jnp.maximum(e_ent, 0)], -1)
+        cand = jnp.concatenate([pos_ent, ent_ent])              # [P+E]
+        # dedupe (keep first occurrence) with a scatter-min of positions
+        c_max = ent.c_max
+        arange = jnp.arange(cand.shape[0], dtype=jnp.int32)
+        first = jnp.full((c_max,), jnp.iinfo(jnp.int32).max, jnp.int32)
+        first = first.at[jnp.maximum(cand, 0)].min(
+            jnp.where(cand >= 0, arange, jnp.iinfo(jnp.int32).max))
+        keep = (cand >= 0) & (first[jnp.maximum(cand, 0)] == arange)
+        # stable-compact the kept candidates to the front, take R_ent
+        order = jnp.argsort(jnp.where(keep, arange, jnp.iinfo(jnp.int32).max))
+        nbrs = jnp.where(keep[order], cand[order], -1)[:r_ent]  # [R_ent]
+
+        # --- line 6: G_ent ∪ q ---------------------------------------------
+        slot = ent.count
+        ids = ent.ids.at[slot].set(new_id)
+        main_to_ent = ent.main_to_ent.at[new_id].set(slot)
+        edges = ent.edges.at[slot].set(nbrs)
+
+        # --- lines 4-5, 7-8: reciprocal links with prune --------------------
+        # for each neighbor p: append q; if full, drop the farthest edge by
+        # symmetric-PQ distance to p (codes are in host memory — no I/O).
+        def wire(edges, i):
+            p = nbrs[i]
+
+            def do(edges):
+                row = edges[p]                                  # [R_ent]
+                occupied = row >= 0
+                free = jnp.argmin(occupied)                     # first -1
+                has_free = ~occupied.all()
+                # distance from p to each current edge and to q
+                p_code = codes[ids[p]]
+                row_codes = codes[ids[jnp.maximum(row, 0)]]
+                d_row = jnp.where(
+                    occupied,
+                    pq_mod.sym_distance(sym_tables, p_code, row_codes), -INF)
+                worst = jnp.argmax(d_row)
+                d_q = pq_mod.sym_distance(
+                    sym_tables, p_code, codes[new_id][None])[0]
+                # if free slot: take it; else replace worst iff q is closer
+                tgt = jnp.where(has_free, free, worst)
+                write = has_free | (d_q < d_row[worst])
+                new_row = jnp.where(
+                    write, row.at[tgt].set(slot.astype(jnp.int32)), row)
+                return edges.at[p].set(new_row)
+
+            return lax.cond((p >= 0) & (p != slot), do, lambda e: e,
+                            edges), None
+
+        edges, _ = lax.scan(wire, edges, jnp.arange(r_ent))
+        return dataclasses.replace(
+            ent, ids=ids, edges=edges, count=ent.count + 1,
+            main_to_ent=main_to_ent)
+
+    return lax.cond(want, do_update, lambda e: e, ent)
+
+
+def entrance_hop_stats(ent: EntranceGraph) -> dict:
+    """Small diagnostics used by tests/benchmarks."""
+    live = ent.ids >= 0
+    deg = (ent.edges >= 0).sum(axis=1) * live
+    return {"count": ent.count,
+            "mean_degree": deg.sum() / jnp.maximum(live.sum(), 1)}

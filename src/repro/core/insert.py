@@ -1,0 +1,279 @@
+"""In-place insertion: ① position seeking → ② structural update.
+
+Position seeking is a full graph traversal with a large explored pool
+(|E_pos| ≫ |E_search|) whose only job is to surface ~R adequate neighbors
+for the new vertex — the paper's diagnosis is that this step dominates
+update cost.  The traversal itself reuses :func:`search.disk_traverse`;
+the rerank is either the packed-layout full rerank or CASR.
+
+The structural update wires the new vertex to its selected neighbors,
+adds reciprocal edges (pruning the farthest edge by symmetric-PQ distance
+when a neighbor is already at max degree R), and charges the layout's
+write costs:
+
+* packed:   (1 + #modified neighbors) full pages — every neighbor's vector
+            is rewritten although the update never touched it (Fig. 4b).
+* decoupled: the modified edgelists are gathered out-of-place onto fresh
+            edge pages (⌈M/edgelists_per_page⌉ page writes) plus exactly
+            one vector write for the new vertex.
+
+RMW reads are free here: the wired neighbors come from the converged
+explored pool, so their edge pages were read during this very insert's
+traversal and still sit in the insert's RMW staging buffer (§8.2) — the
+paper charges the same way.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import cache as cache_mod
+from repro.core import casr as casr_mod
+from repro.core import pq as pq_mod
+from repro.core import search as search_mod
+from repro.core.iomodel import IOCounters, PAGE_BYTES
+from repro.core.layout import GraphStore, LayoutSpec, relocate_edgelists
+
+INF = jnp.float32(3.4e38)
+
+
+# ---------------------------------------------------------------------------
+# Neighbor selection (paper §5.2-5.3)
+# ---------------------------------------------------------------------------
+
+def select_neighbors(pool_ids: jax.Array, casr_res, r: int) -> jax.Array:
+    """Order the pool for wiring: the CASR-loaded close portion ranked by
+    exact distance first, then the unloaded remainder in PQ order (shortcut
+    slots need diversity, not exactness).  Returns [r] ids (-1 padded)."""
+    P = pool_ids.shape[0]
+    valid = pool_ids >= 0
+    arange = jnp.arange(P, dtype=jnp.float32)
+    # loaded → exact distance;  unloaded-valid → big + PQ rank (stable);
+    # invalid → +inf.  exact distances are always ≪ 1e30.
+    key = jnp.where(casr_res.loaded & valid, casr_res.exact_d,
+                    jnp.where(valid, 1e30 + arange, INF))
+    order = jnp.argsort(key)
+    return jnp.where(valid[order], pool_ids[order], -1)[:r]
+
+
+def full_pool_neighbors(pool_ids: jax.Array, r: int) -> jax.Array:
+    """Baseline neighbor selection: pool already exact-reranked — take R."""
+    return pool_ids[:r]
+
+
+# ---------------------------------------------------------------------------
+# Structural update
+# ---------------------------------------------------------------------------
+
+class StructuralResult(NamedTuple):
+    store: GraphStore
+    cache: cache_mod.CacheState
+    counters: IOCounters
+    n_wired: jax.Array      # reciprocal edges actually added
+
+
+def _wire_reciprocal(store: GraphStore, nbrs: jax.Array, new_id: jax.Array,
+                     codes: jax.Array, sym_tables: jax.Array):
+    """Add new_id into each neighbor's edgelist (prune farthest if full).
+
+    Returns (edges, degree, modified[r] bool).
+    """
+    r_slots = nbrs.shape[0]
+
+    def wire(carry, i):
+        edges, degree = carry
+        p = nbrs[i]
+
+        def do(args):
+            edges, degree = args
+            row = edges[p]
+            occupied = row >= 0
+            free = jnp.argmin(occupied)                  # first empty slot
+            has_free = ~occupied.all()
+            p_code = codes[p]
+            row_codes = codes[jnp.maximum(row, 0)]
+            d_row = jnp.where(
+                occupied,
+                pq_mod.sym_distance(sym_tables, p_code, row_codes), -INF)
+            worst = jnp.argmax(d_row)
+            d_new = pq_mod.sym_distance(sym_tables, p_code,
+                                        codes[new_id][None])[0]
+            tgt = jnp.where(has_free, free, worst)
+            write = has_free | (d_new < d_row[worst])
+            new_row = jnp.where(write, row.at[tgt].set(new_id), row)
+            new_deg = jnp.where(write & has_free, degree[p] + 1, degree[p])
+            return (edges.at[p].set(new_row),
+                    degree.at[p].set(new_deg)), write
+
+        def skip(args):
+            return args, jnp.bool_(False)
+
+        dup = jnp.any((nbrs == p) & (jnp.arange(r_slots) < i))
+        (edges, degree), modified = lax.cond(
+            (p >= 0) & (p != new_id) & ~dup, do, skip, (edges, degree))
+        return (edges, degree), modified
+
+    (edges, degree), modified = lax.scan(
+        wire, (store.edges, store.degree), jnp.arange(r_slots))
+    return edges, degree, modified
+
+
+def _charge_writes(counters: IOCounters, spec: LayoutSpec,
+                   n_modified_nbrs: jax.Array,
+                   edge_pages_written: jax.Array) -> IOCounters:
+    """Write-side accounting for one insertion under either layout."""
+    el = spec.edgelist_bytes
+    vb = spec.vector_bytes
+    if spec.kind == "packed":
+        ppv = spec.packed_pages_per_vertex
+        n_pages = (1 + n_modified_nbrs) * ppv
+        edge_b = (1 + n_modified_nbrs) * el
+        vec_b = jnp.int64(vb)                        # the new vertex (useful)
+        wasted_b = (n_modified_nbrs * vb).astype(jnp.int64)  # co-written
+        pad = (n_pages * PAGE_BYTES - edge_b - vec_b - wasted_b)
+        return dataclasses.replace(
+            counters,
+            write_requests=counters.write_requests + n_pages.astype(jnp.int64),
+            edge_bytes_written=counters.edge_bytes_written +
+            edge_b.astype(jnp.int64),
+            vec_bytes_written=counters.vec_bytes_written + vec_b,
+            wasted_vec_bytes_written=counters.wasted_vec_bytes_written +
+            wasted_b,
+            pad_bytes_written=counters.pad_bytes_written +
+            pad.astype(jnp.int64))
+    # decoupled: out-of-place edge pages + exactly one vector write
+    vec_pages = spec.vector_pages_per_read
+    edge_b = ((1 + n_modified_nbrs) * el).astype(jnp.int64)
+    edge_pad = edge_pages_written.astype(jnp.int64) * PAGE_BYTES - edge_b
+    return dataclasses.replace(
+        counters,
+        write_requests=counters.write_requests +
+        edge_pages_written.astype(jnp.int64) + vec_pages,
+        edge_bytes_written=counters.edge_bytes_written + edge_b,
+        vec_bytes_written=counters.vec_bytes_written + jnp.int64(vb),
+        pad_bytes_written=counters.pad_bytes_written + edge_pad +
+        jnp.int64(vec_pages * PAGE_BYTES - vb))
+
+
+def structural_update(store: GraphStore, spec: LayoutSpec,
+                      cache: cache_mod.CacheState, counters: IOCounters,
+                      new_vec: jax.Array, nbrs: jax.Array,
+                      codes: jax.Array, sym_tables: jax.Array
+                      ) -> StructuralResult:
+    """② Commit vertex ``store.count`` with neighbor list ``nbrs`` [R]."""
+    new_id = store.count.astype(jnp.int32)
+    r = store.r
+
+    # the new vertex's own record
+    vectors = store.vectors.at[new_id].set(new_vec.astype(
+        store.vectors.dtype))
+    nbrs = jnp.where(nbrs == new_id, -1, nbrs)               # no self loops
+    edges = store.edges.at[new_id].set(nbrs)
+    degree = store.degree.at[new_id].set((nbrs >= 0).sum())
+    store = dataclasses.replace(store, vectors=vectors, edges=edges,
+                                degree=degree)
+
+    # reciprocal wiring + prune
+    edges, degree, modified = _wire_reciprocal(store, nbrs, new_id, codes,
+                                               sym_tables)
+    store = dataclasses.replace(store, edges=edges, degree=degree,
+                                count=store.count + 1)
+
+    n_modified = modified.sum()
+    if spec.kind == "packed":
+        # in-place page rewrites; the new vertex gets a fresh page group
+        edge_page = store.edge_page.at[new_id].set(store.next_page)
+        page_live = store.page_live.at[store.next_page].add(1)
+        store = dataclasses.replace(store, edge_page=edge_page,
+                                    page_live=page_live,
+                                    next_page=store.next_page + 1)
+        counters = _charge_writes(counters, spec, n_modified,
+                                  jnp.int32(0))
+        return StructuralResult(store, cache, counters, n_modified)
+
+    # decoupled: gather new + modified edgelists onto fresh pages
+    moved_ids = jnp.concatenate([jnp.array([new_id], jnp.int32),
+                                 jnp.where(modified, nbrs, -1)])
+    moved_valid = moved_ids >= 0
+    old_pages = jnp.where(moved_valid,
+                          store.edge_page[jnp.maximum(moved_ids, 0)], -1)
+    store, pages_written = relocate_edgelists(store, moved_ids, moved_valid,
+                                              spec)
+    counters = _charge_writes(counters, spec, n_modified, pages_written)
+
+    # §8.2 eviction hints: any old edge page left with zero live slots
+    def hint(cache, i):
+        pg = old_pages[i]
+        dead = (pg >= 0) & (store.page_live[jnp.maximum(pg, 0)] <= 0)
+        return lax.cond(dead,
+                        lambda c: cache_mod.invalidate_page(c, pg),
+                        lambda c: c, cache), None
+
+    cache, _ = lax.scan(hint, cache, jnp.arange(moved_ids.shape[0]))
+    return StructuralResult(store, cache, counters, n_modified)
+
+
+# ---------------------------------------------------------------------------
+# Full insertion (position seek + rerank + wire)
+# ---------------------------------------------------------------------------
+
+class InsertResult(NamedTuple):
+    store: GraphStore
+    cache: cache_mod.CacheState
+    counters: IOCounters
+    new_id: jax.Array
+    pool_ids: jax.Array       # E_pos (PQ-sorted) — reused by NAVIS-update
+    hops: jax.Array
+    rerank_rounds: jax.Array
+    page_seen: jax.Array      # pages this insert's traversal touched
+
+
+def insert_vertex(store: GraphStore, spec: LayoutSpec, codec: pq_mod.PQCodec,
+                  codes: jax.Array, sym_tables: jax.Array,
+                  cache: cache_mod.CacheState, counters: IOCounters,
+                  new_vec: jax.Array, entry_ids: jax.Array, *,
+                  e_pos: int, k: int, s: int, rerank: str = "casr",
+                  beam_width: int = 4, max_hops: int = 512,
+                  tombstone: jax.Array | None = None,
+                  page_seen: jax.Array | None = None) -> InsertResult:
+    """One in-place insertion.  ``rerank``: "casr" | "full" (static).
+
+    The caller encodes the new vector into ``codes[store.count]`` *before*
+    calling (PQ codes live in host memory and are updated synchronously).
+    ``tombstone`` masks deleted vertices out of neighbor selection;
+    ``page_seen`` seeds the traversal's page buffer (bulk merges).
+    """
+    lut = pq_mod.adc_lut(codec, new_vec)
+    res = search_mod.disk_traverse(
+        store, spec, lut, codes, cache, counters, entry_ids,
+        pool_size=e_pos, beam_width=beam_width, max_hops=max_hops,
+        page_seen=page_seen)
+    counters = res.counters
+    cache = res.cache
+    if tombstone is not None:
+        res = res._replace(pool_ids=jnp.where(
+            tombstone[jnp.maximum(res.pool_ids, 0)], -1, res.pool_ids))
+
+    if rerank == "casr":
+        cres = casr_mod.casr_rerank(store, spec, new_vec, res.pool_ids,
+                                    counters, k=k, s=s)
+        counters = cres.counters
+        nbrs = select_neighbors(res.pool_ids, cres, store.r)
+        rounds = cres.rerank_rounds
+    else:
+        ids, _, _, counters = search_mod.full_rerank(
+            store, spec, new_vec, res, counters, k=res.pool_ids.shape[0])
+        nbrs = full_pool_neighbors(ids, store.r)
+        rounds = jnp.int32(1)
+
+    sres = structural_update(store, spec, cache, counters, new_vec, nbrs,
+                             codes, sym_tables)
+    return InsertResult(store=sres.store, cache=sres.cache,
+                        counters=sres.counters,
+                        new_id=sres.store.count - 1,
+                        pool_ids=res.pool_ids, hops=res.hops,
+                        rerank_rounds=rounds, page_seen=res.page_seen)

@@ -1,0 +1,290 @@
+"""GVS search: entry-point selection → on-disk beam traversal (→ rerank).
+
+The traversal is the paper's ② stage: greedy beam search over the on-disk
+graph using in-memory PQ distances, loading only edgelist pages under the
+decoupled layout (packed layout drags vectors along — counted).  A fixed
+size explored pool (|E_search| for queries, |E_pos| for position seeking) is
+maintained until convergence.
+
+Everything is jittable: the pool, visited bitmap, cache state and I/O
+counters thread through a ``lax.while_loop``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import cache as cache_mod
+from repro.core import pq as pq_mod
+from repro.core.entrance import EntranceGraph, empty_entrance  # noqa: F401
+from repro.core.iomodel import IOCounters, PAGE_BYTES
+from repro.core.layout import GraphStore, LayoutSpec
+
+INF = jnp.float32(3.4e38)
+
+
+def entrance_search(ent: EntranceGraph, lut: jax.Array, codes: jax.Array,
+                    *, n_entry: int, pool_size: int = 32,
+                    max_hops: int = 64):
+    """In-memory beam search over the entrance graph (no storage I/O).
+
+    Returns (entry ids [n_entry] into the MAIN graph, explored-set main ids
+    E_ent [pool_size] with their PQ distances) — the explored set feeds
+    NAVIS-update (Algorithm 2).
+    """
+    c = ent.c_max
+    # seed: first live entry (build keeps a medoid-ish vertex at index 0)
+    seed = jnp.zeros((1,), jnp.int32)
+    seed_main = ent.ids[seed]
+    seed_d = jnp.where(seed_main >= 0,
+                       pq_mod.adc_distance(lut, codes[jnp.maximum(
+                           seed_main, 0)]), INF)
+
+    pool_idx = jnp.full((pool_size,), -1, jnp.int32).at[0].set(seed[0])
+    pool_d = jnp.full((pool_size,), INF).at[0].set(seed_d[0])
+    expanded = jnp.zeros((c,), bool)
+
+    def cond(carry):
+        pool_idx, pool_d, expanded, hops = carry
+        frontier = (pool_idx >= 0) & ~expanded[jnp.maximum(pool_idx, 0)]
+        return (hops < max_hops) & frontier.any()
+
+    def body(carry):
+        pool_idx, pool_d, expanded, hops = carry
+        cand_d = jnp.where((pool_idx >= 0) &
+                           ~expanded[jnp.maximum(pool_idx, 0)], pool_d, INF)
+        best = jnp.argmin(cand_d)
+        v = pool_idx[best]
+        expanded = expanded.at[v].set(True)
+        nbrs = ent.edges[v]                                   # [R_ent]
+        in_pool = (nbrs[:, None] == pool_idx[None, :]).any(axis=1)
+        valid = (nbrs >= 0) & ~expanded[jnp.maximum(nbrs, 0)] & ~in_pool
+        main_ids = ent.ids[jnp.maximum(nbrs, 0)]
+        d = jnp.where(valid & (main_ids >= 0),
+                      pq_mod.adc_distance(lut, codes[jnp.maximum(
+                          main_ids, 0)]), INF)
+        all_idx = jnp.concatenate([pool_idx, jnp.where(valid, nbrs, -1)])
+        all_d = jnp.concatenate([pool_d, d])
+        order = jnp.argsort(all_d)[:pool_size]
+        return (all_idx[order], all_d[order], expanded, hops + 1)
+
+    pool_idx, pool_d, expanded, hops = lax.while_loop(
+        cond, body, (pool_idx, pool_d, expanded,
+                     jnp.zeros((), jnp.int32)))
+    main = jnp.where(pool_idx >= 0, ent.ids[jnp.maximum(pool_idx, 0)], -1)
+    return main[:n_entry], main, pool_d
+
+
+# ---------------------------------------------------------------------------
+# On-disk traversal
+# ---------------------------------------------------------------------------
+
+class TraverseResult(NamedTuple):
+    pool_ids: jax.Array       # [pool] main-graph ids sorted by PQ distance
+    pool_dists: jax.Array     # [pool] PQ distances
+    vec_loaded: jax.Array     # [N_max] bool — vectors dragged in (packed)
+    hops: jax.Array
+    cache: cache_mod.CacheState
+    counters: IOCounters
+    page_seen: jax.Array      # [P_max] bool — pages this traversal read
+
+
+def _charge_page_read(counters: IOCounters, spec: LayoutSpec, *,
+                      is_edge_page: jax.Array) -> IOCounters:
+    """Account one 4 KiB page read from the slow tier."""
+    if spec.kind == "packed":
+        per = spec.packed_per_page
+        payload = per * spec.packed_record_bytes
+        vec = per * spec.vector_bytes
+        edge = per * spec.edgelist_bytes
+        # vectors counted provisionally as wasted; reranking reclassifies
+        return dataclasses.replace(
+            counters,
+            read_requests=counters.read_requests + 1,
+            edge_bytes_read=counters.edge_bytes_read + edge,
+            wasted_vec_bytes_read=counters.wasted_vec_bytes_read + vec,
+            pad_bytes_read=counters.pad_bytes_read + PAGE_BYTES - payload)
+    per = spec.edgelists_per_page
+    payload = per * spec.edgelist_bytes
+    return dataclasses.replace(
+        counters,
+        read_requests=counters.read_requests + 1,
+        edge_bytes_read=counters.edge_bytes_read + payload,
+        pad_bytes_read=counters.pad_bytes_read + PAGE_BYTES - payload)
+
+
+def fetch_edgelists(store: GraphStore, spec: LayoutSpec,
+                    cache: cache_mod.CacheState, counters: IOCounters,
+                    page_seen: jax.Array, ids: jax.Array, valid: jax.Array):
+    """Read the edge pages backing ``ids`` (beam of W vertices) through the
+    per-query buffer (``page_seen``) and the host cache.  Pages already read
+    by *this* traversal are free (the query holds them in its scratch
+    buffer, as DiskANN-lineage systems do) — this is where the decoupled
+    layout's page-level locality pays off, since ~``edgelists_per_page``
+    co-traversed vertices ride on one read.  Packed layout: the page also
+    carries the vertices' vectors (marked loaded by the caller).
+
+    Returns (edges [W,R], cache, counters, page_seen).
+    """
+    w = ids.shape[0]
+    safe = jnp.maximum(ids, 0)
+    pages = store.edge_page[safe]
+
+    def step(carry, i):
+        cache, counters, page_seen = carry
+        page = pages[i]
+        # free if: invalid, duplicate within this beam, or already read by
+        # this traversal (per-query buffer)
+        earlier = jnp.arange(w) < i
+        dup = jnp.any((pages == page) & valid & earlier)
+        dup = dup | ~valid[i] | page_seen[jnp.maximum(page, 0)]
+
+        def charged(args):
+            cache, counters = args
+            hit, cache = cache_mod.access(cache, page)
+            counters = dataclasses.replace(
+                counters,
+                cache_hits=counters.cache_hits + hit,
+                cache_misses=counters.cache_misses + (~hit))
+            counters = lax.cond(
+                hit, lambda c: c,
+                lambda c: _charge_page_read(c, spec, is_edge_page=True),
+                counters)
+            return cache, counters
+
+        cache, counters = lax.cond(dup, lambda a: a, charged,
+                                   (cache, counters))
+        page_seen = page_seen.at[jnp.maximum(page, 0)].set(
+            page_seen[jnp.maximum(page, 0)] | valid[i])
+        return (cache, counters, page_seen), None
+
+    (cache, counters, page_seen), _ = lax.scan(
+        step, (cache, counters, page_seen), jnp.arange(w))
+    edges = jnp.where(valid[:, None], store.edges[safe], -1)
+    return edges, cache, counters, page_seen
+
+
+def disk_traverse(store: GraphStore, spec: LayoutSpec, lut: jax.Array,
+                  codes: jax.Array, cache: cache_mod.CacheState,
+                  counters: IOCounters, entry_ids: jax.Array, *,
+                  pool_size: int, beam_width: int = 4,
+                  max_hops: int = 512,
+                  page_seen: jax.Array | None = None) -> TraverseResult:
+    """Greedy beam search over the on-disk graph with PQ distances.
+
+    ``entry_ids``: [n_entry] main-graph ids (-1 padded) from ① entry-point
+    selection.  Pool converges when no unexpanded candidate remains among
+    the top ``pool_size``.  ``page_seen`` optionally seeds the per-query
+    page buffer (bulk merges share one buffer across many seeks so repeated
+    page reads amortise — FreshDiskANN's batched-I/O advantage).
+    """
+    n_max = store.n_max
+    n_entry = entry_ids.shape[0]
+    pad = pool_size + beam_width * store.r
+
+    safe_e = jnp.maximum(entry_ids, 0)
+    e_valid = entry_ids >= 0
+    e_d = jnp.where(e_valid, pq_mod.adc_distance(lut, codes[safe_e]), INF)
+    order = jnp.argsort(e_d)
+    pool_ids = jnp.full((pool_size,), -1, jnp.int32)
+    pool_d = jnp.full((pool_size,), INF)
+    k = min(n_entry, pool_size)
+    pool_ids = pool_ids.at[:k].set(
+        jnp.where(e_valid[order][:k], entry_ids[order][:k], -1))
+    pool_d = pool_d.at[:k].set(e_d[order][:k])
+    expanded = jnp.zeros((n_max,), bool)
+    vec_loaded = jnp.zeros((n_max,), bool)
+    if page_seen is None:
+        page_seen = jnp.zeros_like(store.page_live, dtype=bool)
+
+    def cond(carry):
+        pool_ids, pool_d, expanded, vec_loaded, page_seen, cache, \
+            counters, hops = carry
+        frontier = (pool_ids >= 0) & ~expanded[jnp.maximum(pool_ids, 0)]
+        return (hops < max_hops) & frontier.any()
+
+    def body(carry):
+        pool_ids, pool_d, expanded, vec_loaded, page_seen, cache, \
+            counters, hops = carry
+        unexp = (pool_ids >= 0) & ~expanded[jnp.maximum(pool_ids, 0)]
+        cand_d = jnp.where(unexp, pool_d, INF)
+        sel = jnp.argsort(cand_d)[:beam_width]
+        beam = jnp.where(cand_d[sel] < INF, pool_ids[sel], -1)
+        beam_valid = beam >= 0
+        expanded = expanded.at[jnp.maximum(beam, 0)].set(
+            expanded[jnp.maximum(beam, 0)] | beam_valid)
+
+        edges, cache, counters, page_seen = fetch_edgelists(
+            store, spec, cache, counters, page_seen, beam, beam_valid)
+        if spec.kind == "packed":
+            vec_loaded = vec_loaded.at[jnp.maximum(beam, 0)].set(
+                vec_loaded[jnp.maximum(beam, 0)] | beam_valid)
+
+        # Vamana semantics: the explored pool is a *set* — candidates evicted
+        # from it may be re-scored and re-enter later; only expansion is
+        # permanent (marking visited-on-scoring would permanently ban evicted
+        # near-misses and measurably hurt recall at wide beams).
+        nbrs = edges.reshape(-1)                              # [W*R]
+        safe_n = jnp.maximum(nbrs, 0)
+        in_pool = (nbrs[:, None] == pool_ids[None, :]).any(axis=1)
+        nvalid = (nbrs >= 0) & ~expanded[safe_n] & ~in_pool
+        # dedupe within the flat neighbor list (first occurrence wins)
+        idx_of = jnp.full((n_max,), jnp.iinfo(jnp.int32).max, jnp.int32)
+        idx_of = idx_of.at[safe_n].min(
+            jnp.where(nvalid, jnp.arange(nbrs.shape[0], dtype=jnp.int32),
+                      jnp.iinfo(jnp.int32).max))
+        nvalid = nvalid & (idx_of[safe_n] ==
+                           jnp.arange(nbrs.shape[0], dtype=jnp.int32))
+        nd = jnp.where(nvalid, pq_mod.adc_distance(lut, codes[safe_n]), INF)
+
+        all_ids = jnp.concatenate([pool_ids, jnp.where(nvalid, nbrs, -1)])
+        all_d = jnp.concatenate([pool_d, nd])
+        order = jnp.argsort(all_d)[:pool_size]
+        pool_ids, pool_d = all_ids[order], all_d[order]
+        counters = dataclasses.replace(counters, hops=counters.hops + 1)
+        return (pool_ids, pool_d, expanded, vec_loaded, page_seen,
+                cache, counters, hops + 1)
+
+    carry = (pool_ids, pool_d, expanded, vec_loaded, page_seen,
+             cache, counters, jnp.zeros((), jnp.int32))
+    pool_ids, pool_d, expanded, vec_loaded, page_seen, cache, \
+        counters, hops = lax.while_loop(cond, body, carry)
+    return TraverseResult(pool_ids, pool_d, vec_loaded, hops, cache,
+                          counters, page_seen)
+
+
+# ---------------------------------------------------------------------------
+# Full-rerank baseline (packed layout: vectors already piggybacked)
+# ---------------------------------------------------------------------------
+
+def full_rerank(store: GraphStore, spec: LayoutSpec, q: jax.Array,
+                res: TraverseResult, counters: IOCounters, *, k: int):
+    """Exact-rerank every pool candidate (the non-CASR baseline).
+
+    Under the packed layout the vectors rode along with the edge pages
+    (zero extra I/O); under the decoupled layout this costs one vector read
+    per candidate — the naïve-unpacking strawman of §3.1.
+    """
+    ids = res.pool_ids
+    valid = ids >= 0
+    safe = jnp.maximum(ids, 0)
+    if spec.kind == "decoupled":
+        n_loads = valid.sum()
+        pages = spec.vector_pages_per_read
+        counters = dataclasses.replace(
+            counters,
+            read_requests=counters.read_requests + n_loads,
+            wasted_vec_bytes_read=counters.wasted_vec_bytes_read +
+            n_loads * pages * PAGE_BYTES)
+        vec_loaded = res.vec_loaded.at[safe].set(
+            res.vec_loaded[safe] | valid)
+    else:
+        vec_loaded = res.vec_loaded
+    d = jnp.where(valid, pq_mod.exact_l2(q, store.vectors[safe]), INF)
+    order = jnp.argsort(d)
+    return ids[order][:k], d[order][:k], vec_loaded, counters

@@ -1,0 +1,4 @@
+from repro.data.pipeline import (TokenStream, insert_stream, make_clustered,
+                                 query_stream)
+
+__all__ = ["TokenStream", "insert_stream", "make_clustered", "query_stream"]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Three kernels, each with a pure-jnp oracle in ref.py and a jitted wrapper
+in ops.py (interpret=True off-TPU):
+
+  pq_adc     — ADC LUT distance (traversal's per-hop examination)
+  rerank_l2  — grouped exact-L2 rerank = CASR's pipelined compute stage
+  topk_pool  — explored-pool merge (partial top-k without sort)
+"""
+from repro.kernels.ops import adc_distance, pool_merge, rerank_l2
+
+__all__ = ["adc_distance", "pool_merge", "rerank_l2"]

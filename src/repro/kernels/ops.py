@@ -1,0 +1,37 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels execute their bodies in Python via the Pallas interpreter, which
+validates the exact TPU program against the ref.py oracles).  On a real
+TPU backend the same calls compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.pq_adc import adc_distance_pallas
+from repro.kernels.rerank_l2 import rerank_l2_pallas
+from repro.kernels.topk_pool import pool_merge_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def adc_distance(lut, codes, *, block_b: int = 256):
+    return adc_distance_pallas(lut, codes, block_b=block_b,
+                               interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("group",))
+def rerank_l2(q, xs, *, group: int = 8):
+    return rerank_l2_pallas(q, xs, group=group, interpret=not _on_tpu())
+
+
+@jax.jit
+def pool_merge(pool_d, pool_ids, new_d, new_ids):
+    return pool_merge_pallas(pool_d, pool_ids, new_d, new_ids,
+                             interpret=not _on_tpu())

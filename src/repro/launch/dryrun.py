@@ -1,0 +1,383 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (jax locks the device
+# count at first init).  Everything below is ordinary code.
+#
+# Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+# production meshes and extract memory / FLOP / collective-byte analyses.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import configs as C
+from repro.launch import mesh as M
+from repro.models import transformer as T
+from repro.train import optimizer as O
+from repro.train.train_step import make_train_step
+from repro.train.serve_step import make_decode_step, make_prefill_step
+
+# ---------------------------------------------------------------------------
+# HLO collective-traffic parser
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'bf16[16,128]' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum per-device collective bytes from post-SPMD HLO text.
+
+    Collectives inside while bodies (scanned layers) are multiplied by the
+    loop trip count, inferred from the largest integer constant in the loop
+    condition computation.  Returns totals by kind plus per-kind op counts.
+    """
+    # 1. split into computations
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^\s*(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*{",
+                     line)
+        if ("{" in line and ("->" in line or line.strip().startswith("ENTRY"))
+                and not line.strip().startswith("//")):
+            m2 = re.search(r"%?([\w\.\-]+)\s*\(", line)
+            if m2:
+                cur = m2.group(1)
+                comps[cur] = []
+                continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+
+    # 2. trip count per while body: map body-comp -> count
+    body_trip: dict[str, int] = {}
+    cond_of_body: dict[str, str] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            if " while(" in ln or "=while(" in ln:
+                bm = re.search(r"body=%?([\w\.\-]+)", ln)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if bm and cm:
+                    cond_of_body[bm.group(1)] = cm.group(1)
+    for body, cond in cond_of_body.items():
+        consts = [int(x) for ln in comps.get(cond, ())
+                  for x in re.findall(r"constant\((\d+)\)", ln)]
+        body_trip[body] = max(consts) if consts else 1
+
+    # 3. call-graph multipliers (while bodies multiply; calls/fusions carry 1x)
+    parents: dict[str, list[tuple[str, int]]] = {}
+    for cname, lines in comps.items():
+        for ln in lines:
+            for ref in re.findall(
+                    r"(?:body|to_apply|calls)=%?([\w\.\-]+)", ln):
+                mult = body_trip.get(ref, 1) if f"body=%{ref}" in ln or \
+                    f"body={ref}" in ln else 1
+                parents.setdefault(ref, []).append((cname, mult))
+
+    mult_cache: dict[str, int] = {}
+
+    def multiplier(comp: str, depth=0) -> int:
+        if depth > 20:
+            return 1
+        if comp in mult_cache:
+            return mult_cache[comp]
+        ps = parents.get(comp)
+        if not ps:
+            mult_cache[comp] = 1
+            return 1
+        total = 0
+        for parent, m in ps:
+            total += m * multiplier(parent, depth + 1)
+        mult_cache[comp] = max(total, 1)
+        return mult_cache[comp]
+
+    totals = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for cname, lines in comps.items():
+        mult = multiplier(cname)
+        for ln in lines:
+            for kind in _COLLECTIVES:
+                if re.search(rf"=\s*[\w\[\],\(\) ]*{kind}\(", ln) or \
+                        f" {kind}(" in ln:
+                    lhs = ln.split("=")[0] if "=" in ln else ""
+                    shape_src = ln.split("=", 1)[1] if "=" in ln else ln
+                    head = shape_src.strip().split(kind)[0]
+                    b = _shape_bytes(head)
+                    # all-reduce moves ~2x its payload on a ring; others ~1x
+                    wire = 2 * b if kind == "all-reduce" else b
+                    totals[kind] += wire * mult
+                    counts[kind] += mult
+                    break
+    totals["total"] = sum(totals[k] for k in _COLLECTIVES)
+    return {"bytes_by_kind": totals, "op_counts": counts}
+
+
+# ---------------------------------------------------------------------------
+# Cell construction
+# ---------------------------------------------------------------------------
+
+def build_cell(arch_id: str, shape_name: str, mesh, *, smoke: bool = False):
+    """Returns (jitted_fn, arg_shapes:list, donate) ready to .lower()."""
+    arch = C.get_arch(arch_id)
+    shape = C.SHAPES[shape_name]
+    cfg = arch.smoke if smoke else arch.model
+    rules = M.make_rules(mesh, kind=shape.kind,
+                         global_batch=shape.global_batch, cfg=cfg)
+    pspecs = T.param_specs(cfg)
+    pshapes = T.param_shapes(cfg)
+    psh = M.named(mesh, pspecs)
+    specs = C.input_specs(arch, shape, smoke=smoke, rules=rules)
+
+    if shape.kind == "train":
+        opt = O.make_optimizer(arch.optimizer, state_dtype=arch.opt_state_dtype)
+        step_fn = make_train_step(cfg, opt, rules=rules, mesh=mesh)
+        opt_shapes = jax.eval_shape(opt.init, pshapes)
+        opt_specs = opt.init_specs(pspecs, pshapes)
+        osh = M.named(mesh, opt_specs)
+        batch = {k: v for k, v in specs.items()}
+        bsh = M.named(mesh, M.batch_specs(mesh, rules, batch))
+        fn = jax.jit(step_fn,
+                     in_shardings=(psh, osh, bsh, None),
+                     donate_argnums=(0, 1))
+        args = (pshapes, opt_shapes, batch,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        return fn, args
+
+    if shape.kind == "prefill":
+        step_fn = make_prefill_step(cfg, rules=rules, mesh=mesh)
+        tokens = specs["tokens"]
+        cross = specs.get("cross_src")
+        tsh = M.named(mesh, M.batch_specs(mesh, rules, {"tokens": tokens}))[
+            "tokens"]
+        if cross is not None:
+            csh = M.named(mesh, P(rules.batch, None, None))
+            fn = jax.jit(step_fn, in_shardings=(psh, tsh, csh))
+            return fn, (pshapes, tokens, cross)
+        fn = jax.jit(lambda p, t: step_fn(p, t), in_shardings=(psh, tsh))
+        return fn, (pshapes, tokens)
+
+    # decode
+    step_fn = make_decode_step(cfg, rules=rules, mesh=mesh)
+    cache_sp = T.cache_specs(cfg, shape.global_batch, shape.seq_len, rules)
+    csh = M.named(mesh, cache_sp)
+    tokens = specs["tokens"]
+    tsh = M.named(mesh, P(rules.batch, None))
+    fn = jax.jit(lambda p, c, t, pos: step_fn(p, c, t, pos),
+                 in_shardings=(psh, csh, tsh, None),
+                 donate_argnums=(1,))
+    return fn, (pshapes, specs["cache"], tokens, specs["pos"])
+
+
+def _sharded_bytes(shapes_tree, specs_tree, mesh) -> int:
+    """Per-device bytes of a sharded pytree (leaf nbytes / shard count)."""
+    sizes = dict(mesh.shape)
+
+    def leaf(sh, sp):
+        n = 1
+        for d, ax in zip(sh.shape, tuple(sp) + (None,) * len(sh.shape)):
+            axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+            k = 1
+            for a in axes:
+                k *= sizes.get(a, 1)
+            n *= -(-d // k)
+        return n * sh.dtype.itemsize
+
+    shapes = jax.tree.leaves(shapes_tree)
+    specs = jax.tree.leaves(
+        specs_tree, is_leaf=lambda x: isinstance(x, P))
+    return sum(leaf(sh, sp) for sh, sp in zip(shapes, specs))
+
+
+def analytical_memory(arch_id: str, shape_name: str, mesh) -> dict:
+    """Closed-form per-device HBM model (authoritative 'fits' evidence; the
+    CPU backend's memory_analysis() reports a conservative arena that
+    double-buffers while-loop carries — see EXPERIMENTS.md §Dry-run)."""
+    arch = C.get_arch(arch_id)
+    shape = C.SHAPES[shape_name]
+    cfg = arch.model
+    rules = M.make_rules(mesh, kind=shape.kind,
+                         global_batch=shape.global_batch)
+    pshapes = T.param_shapes(cfg)
+    pspecs = T.param_specs(cfg)
+    out = {"params": _sharded_bytes(pshapes, pspecs, mesh)}
+    if shape.kind == "train":
+        opt = O.make_optimizer(arch.optimizer,
+                               state_dtype=arch.opt_state_dtype)
+        oshapes = jax.eval_shape(opt.init, pshapes)
+        ospecs = opt.init_specs(pspecs, pshapes)
+        out["opt_state"] = _sharded_bytes(oshapes, ospecs, mesh)
+        out["grads"] = out["params"]
+        dsize = M.data_size(mesh)
+        tp = mesh.shape.get("model", 1)
+        b_loc = -(-shape.global_batch // dsize)
+        out["residual_stack"] = (cfg.num_layers * b_loc *
+                                 (shape.seq_len // tp) * cfg.d_model *
+                                 cfg.dtype.itemsize)
+    elif shape.kind == "decode":
+        cshapes = T.cache_shapes(cfg, shape.global_batch, shape.seq_len,
+                                 rules)
+        cspecs = T.cache_specs(cfg, shape.global_batch, shape.seq_len, rules)
+        out["kv_cache"] = _sharded_bytes(cshapes, cspecs, mesh)
+    out["total"] = sum(out.values())
+    return out
+
+
+def run_cell(arch_id: str, shape_name: str, mesh, mesh_name: str,
+             *, smoke: bool = False, want_hlo: bool = False,
+             hlo_dir=None) -> dict:
+    t0 = time.time()
+    fn, args = build_cell(arch_id, shape_name, mesh, smoke=smoke)
+    lowered = fn.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    if hlo_dir is not None:
+        import gzip
+        tag = f"{arch_id}__{shape_name}__{mesh_name}"
+        with gzip.open(Path(hlo_dir) / f"{tag}.hlo.txt.gz", "wt") as f:
+            f.write(hlo)
+
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+        "devices": int(n_dev),
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "flops": cost.get("flops", 0.0) if cost else None,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else None,
+        "cost_analysis_keys": sorted(cost)[:40] if cost else [],
+        "memory": _mem_dict(mem),
+        "memory_model": analytical_memory(arch_id, shape_name, mesh)
+        if not smoke else {},
+        "collectives": coll,
+    }
+    if want_hlo:
+        result["hlo_len"] = len(hlo)
+    return result
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for field in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "alias_size_in_bytes",
+                  "temp_size_in_bytes", "host_generated_code_size_in_bytes",
+                  "host_argument_size_in_bytes", "host_output_size_in_bytes",
+                  "host_alias_size_in_bytes", "host_temp_size_in_bytes",
+                  "peak_memory_in_bytes"):
+        if hasattr(mem, field):
+            out[field] = int(getattr(mem, field))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use reduced configs (debugging the harness)")
+    ap.add_argument("--skip-existing", action="store_true",
+                    help="skip cells whose .json output already exists")
+    ap.add_argument("--dump-hlo", action="store_true",
+                    help="write gz-compressed post-SPMD HLO per cell")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args(argv)
+
+    out_dir = Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [("pod16x16", M.make_production_mesh(multi_pod=False)),
+                  ("pod2x16x16", M.make_production_mesh(multi_pod=True))]
+    else:
+        mesh = M.make_production_mesh(multi_pod=args.multi_pod)
+        meshes = [("pod2x16x16" if args.multi_pod else "pod16x16", mesh)]
+
+    if args.all:
+        todo = [(a, s) for a, s, _ in C.cells()]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        todo = [(args.arch, args.shape)]
+
+    failures = 0
+    for mesh_name, mesh in meshes:
+        for arch_id, shape_name in todo:
+            tag = f"{arch_id}__{shape_name}__{mesh_name}"
+            out_file = out_dir / f"{tag}.json"
+            if args.skip_existing and out_file.exists():
+                print(f"SKIP {tag} (exists)", flush=True)
+                continue
+            try:
+                with mesh:
+                    res = run_cell(arch_id, shape_name, mesh, mesh_name,
+                                   smoke=args.smoke,
+                                   hlo_dir=out_dir if args.dump_hlo
+                                   else None)
+                out_file.write_text(json.dumps(res, indent=1))
+                mem = res["memory"]
+                per_dev = (mem.get("argument_size_in_bytes", 0)
+                           + mem.get("temp_size_in_bytes", 0)
+                           + mem.get("output_size_in_bytes", 0)
+                           - mem.get("alias_size_in_bytes", 0))
+                print(f"OK   {tag}: compile={res['compile_s']}s "
+                      f"flops={res['flops']:.3e} "
+                      f"coll={res['collectives']['bytes_by_kind']['total']:.3e}B "
+                      f"mem/dev~{per_dev/1e9:.2f}GB", flush=True)
+            except Exception as e:  # noqa: BLE001 — sweep must keep going
+                failures += 1
+                out_file.with_suffix(".err").write_text(
+                    "".join(traceback.format_exception(e)))
+                print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,392 @@
+"""Post-SPMD HLO analysis: FLOPs, HBM traffic and collective bytes with
+while-loop trip-count multipliers.
+
+XLA's ``compiled.cost_analysis()`` counts a while body's cost ONCE, so a
+scan-over-layers model under-reports FLOPs/bytes by ~num_layers.  The
+roofline needs per-step totals, so this module parses the optimized HLO
+text instead:
+
+* computations are split and a call-graph multiplier is computed for each
+  (while bodies multiply by the trip count inferred from their condition's
+  compare constant; fusions/calls carry ×1),
+* **FLOPs**: every ``dot`` contributes 2·|out|·|contracting| × multiplier,
+* **HBM traffic**: instructions of *control* computations (ENTRY, while
+  bodies/conds — i.e. not fused subcomputations) contribute operand +
+  output bytes × multiplier; bookkeeping ops (tuple plumbing, parameters,
+  constants, bitcasts) are skipped.  Fusion-internal ops never touch HBM,
+  so only fusion boundaries count — matching how XLA:TPU schedules them,
+* **collective bytes**: operand sizes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute × multiplier
+  (all-reduce wires ~2× its payload on a ring).
+
+All numbers are per-device (the HLO module is the partitioned program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SKIP_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng",
+    "get-dimension-size",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# "%name = SHAPE opname(rest" — SHAPE may be a tuple containing layout
+# braces and /*index=N*/ comments, so match it non-greedily up to the last
+# lowercase-op-token-followed-by-( pattern.
+_DEF_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s([a-z][\w\-]*)\((.*)$")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    defs: dict            # name -> shape string
+
+
+def split_computations(hlo: str) -> dict[str, "Computation"]:
+    comps: dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+            m = re.search(r"%?([\w\.\-]+)\s*\(", s)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if s == "}":
+            cur = None
+            continue
+        dm = _DEF_RE.match(line)
+        if dm:
+            name, shape, op, rest = dm.groups()
+            cur.instrs.append(Instr(name, shape, op, rest))
+            cur.defs[name] = shape
+        # parameters appear as "%p = f32[...] parameter(0)" (matched above)
+    return comps
+
+
+def _trip_counts(comps: dict) -> dict[str, int]:
+    """while body computation name -> trip count (max cond constant)."""
+    body_cond = {}
+    for c in comps.values():
+        for ins in c.instrs:
+            if ins.op == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                if bm and cm:
+                    body_cond[bm.group(1)] = cm.group(1)
+    trips = {}
+    for body, cond in body_cond.items():
+        consts = []
+        for ins in comps.get(cond, Computation("", [], {})).instrs:
+            if ins.op == "constant":
+                m = re.match(r"\s*(\d+)\)", ins.rest)
+                if m:
+                    consts.append(int(m.group(1)))
+            consts += [int(x) for x in
+                       re.findall(r"constant\((\d+)\)", ins.rest)]
+        trips[body] = max(consts) if consts else 1
+    return trips
+
+
+_REF_RE = re.compile(
+    r"(?:calls|to_apply|body|condition|branch_computations=\{)"
+    r"[=]?%?([\w\.\-]+)")
+
+
+def _multipliers(comps: dict, trips: dict) -> dict[str, int]:
+    parents: dict[str, list[tuple[str, int]]] = {}
+    called_via_calls: set[str] = set()
+    for cname, c in comps.items():
+        for ins in c.instrs:
+            for attr, ref in re.findall(
+                    r"(calls|to_apply|body|condition)=%?([\w\.\-]+)",
+                    ins.rest):
+                mult = trips.get(ref, 1) if attr == "body" else 1
+                parents.setdefault(ref, []).append((cname, mult))
+                if attr in ("calls", "to_apply"):
+                    called_via_calls.add(ref)
+            bm = re.search(r"branch_computations=\{([^}]*)\}", ins.rest)
+            if bm:
+                for ref in re.findall(r"%?([\w\.\-]+)", bm.group(1)):
+                    parents.setdefault(ref, []).append((cname, 1))
+                    called_via_calls.add(ref)
+
+    cache: dict[str, int] = {}
+
+    def mult(comp: str, depth=0) -> int:
+        if depth > 40:
+            return 1
+        if comp in cache:
+            return cache[comp]
+        ps = parents.get(comp)
+        if not ps:
+            cache[comp] = 1
+            return 1
+        total = sum(m * mult(par, depth + 1) for par, m in ps)
+        cache[comp] = max(total, 1)
+        return cache[comp]
+
+    out = {c: mult(c) for c in comps}
+    out["__fused__"] = sorted(called_via_calls)  # type: ignore
+    return out
+
+
+def analyze(hlo: str, *, bf16_collectives: bool | None = None) -> dict:
+    comps = split_computations(hlo)
+    trips = _trip_counts(comps)
+    mults = _multipliers(comps, trips)
+    fused = set(mults.pop("__fused__"))  # computations inlined by a caller
+
+    # is this a bf16 model?  (drives the collective dtype rule; callers
+    # that know the config dtype pass it explicitly)
+    if bf16_collectives is None:
+        n_bf16 = hlo.count("bf16[")
+        n_f32 = hlo.count("f32[")
+        bf16_collectives = n_bf16 > 0.2 * (n_bf16 + n_f32)
+    _bf16_module = bf16_collectives
+
+    dot_flops = 0.0
+    traffic = 0.0
+    coll = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts = {k: 0 for k in _COLLECTIVES}
+
+    def _collective_scale(ins, c) -> float:
+        """TPU dtype correction for collectives.
+
+        XLA:CPU has no native bf16 matmul: its float-normalization pass
+        upcasts every bf16 dot's operands/outputs to f32, and the
+        algebraic simplifier hoists those converts across the
+        SPMD-placed all-gathers/all-reduces — so the CPU-compiled HLO
+        moves f32 activations where a TPU compilation (native bf16 MXU;
+        converts sink into the dot) moves bf16.  Rule: in a bf16-dominant
+        module, any ≥1 MiB f32 collective is counted at bf16 width.
+        Small f32 collectives (loss scalars, norms) are left alone.
+        """
+        shapes = _SHAPE_RE.findall(ins.shape)
+        if not shapes:
+            return 1.0
+        if all(dt == "f32" for dt, _ in shapes) and \
+                _shape_bytes(ins.shape) >= (1 << 20) and _bf16_module:
+            return 0.5
+        return 1.0
+
+    def _fusion_sub(ins):
+        fm = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+        if fm and fm.group(1) in comps:
+            return comps[fm.group(1)]
+        return None
+
+    def _instr_traffic(ins, defs) -> float:
+        """HBM bytes of one control-flow instruction.
+
+        * dynamic-update-slice (incl. fusions rooted in one, possibly
+          convert-wrapped) is in-place on TPU: write the update slice,
+          don't re-read the aliased buffer.
+        * dynamic-slice reads only the slice it produces; a fusion
+          parameter that is consumed *only through dynamic-slice* inside
+          the fusion contributes the slice bytes, not the buffer bytes
+          (scan bodies slice their layer out of stacked weight/cache
+          arrays — charging the full stack per layer is a 48× overcount).
+        """
+        out_b = _shape_bytes(ins.shape)
+        refs = re.findall(r"%([\w\.\-]+)", ins.rest)[:10]
+        if ins.op == "dynamic-slice":
+            return 2.0 * out_b
+        if ins.op == "dynamic-update-slice":
+            upd = _shape_bytes(defs.get(refs[1], "")) if len(refs) > 1 else 0
+            others = sum(_shape_bytes(defs.get(r2, "")) for r2 in refs[2:])
+            return float(2 * upd + others)
+        if ins.op != "fusion":
+            b = float(out_b)
+            for r2 in refs:
+                if r2 in defs:
+                    b += _shape_bytes(defs[r2])
+            return b
+
+        sub = _fusion_sub(ins)
+        if sub is None or not sub.instrs:
+            return float(out_b)
+        # root DUS (optionally behind converts): output is an in-place
+        # update — count the update slice, not the buffer
+        root = sub.instrs[-1]
+        seen = 0
+        while root.op == "convert" and seen < 3:
+            tgt = re.findall(r"%([\w\.\-]+)", root.rest)
+            nxt = next((i for i in sub.instrs if i.name == (
+                tgt[0] if tgt else "")), None)
+            if nxt is None:
+                break
+            root, seen = nxt, seen + 1
+        if root.op == "dynamic-update-slice":
+            dus_refs = re.findall(r"%([\w\.\-]+)", root.rest)
+            upd = _shape_bytes(sub.defs.get(dus_refs[1], "")) \
+                if len(dus_refs) > 1 else 0
+            out_b = 2 * upd
+        # parameters consumed only via dynamic-slice count at slice size
+        param_of = {}                       # sub param index -> global ref
+        for k, i2 in enumerate(sub.instrs):
+            if i2.op == "parameter":
+                m2 = re.match(r"\s*(\d+)\)", i2.rest)
+                if m2:
+                    param_of[i2.name] = int(m2.group(1))
+        sliced_params = {}
+        used_elsewhere = set()
+        for i2 in sub.instrs:
+            rr = re.findall(r"%([\w\.\-]+)", i2.rest)
+            for r2 in rr:
+                if r2 in param_of:
+                    if i2.op == "dynamic-slice" and rr and rr[0] == r2:
+                        sliced_params.setdefault(
+                            r2, 0)
+                        sliced_params[r2] += _shape_bytes(i2.shape)
+                    else:
+                        used_elsewhere.add(r2)
+        b = float(out_b)
+        for pname, idx in param_of.items():
+            if idx >= len(refs):
+                continue
+            gref = refs[idx]
+            if gref not in defs:
+                continue
+            if pname in sliced_params and pname not in used_elsewhere:
+                b += sliced_params[pname]
+            else:
+                b += _shape_bytes(defs[gref])
+        return b
+
+    for cname, c in comps.items():
+        m = mults.get(cname, 1)
+        control = cname not in fused
+        for ins in c.instrs:
+            if ins.op == "dot":
+                out_elems = math.prod(_shape_dims(ins.shape) or [1])
+                lhs_m = re.match(r"\s*%?([\w\.\-]+)", ins.rest)
+                contract = 1
+                cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                               ins.rest)
+                if lhs_m and cm and lhs_m.group(1) in c.defs:
+                    ldims = _shape_dims(c.defs[lhs_m.group(1)])
+                    for ci in cm.group(1).split(","):
+                        if ci and int(ci) < len(ldims):
+                            contract *= ldims[int(ci)]
+                dot_flops += 2.0 * out_elems * contract * m
+            for kind in _COLLECTIVES:
+                if ins.op == kind or ins.op.startswith(kind + "-start"):
+                    b = _shape_bytes(ins.shape) * _collective_scale(ins, c)
+                    wire = 2 * b if kind == "all-reduce" else b
+                    coll[kind] += wire * m
+                    coll_counts[kind] += m
+                    break
+            if control and ins.op not in _SKIP_OPS and ins.op != "while":
+                traffic += _instr_traffic(ins, c.defs) * m
+
+    coll["total"] = sum(coll[k] for k in _COLLECTIVES)
+    return {
+        "dot_flops": dot_flops,
+        "hbm_traffic_bytes": traffic,
+        "collectives": {"bytes_by_kind": coll, "op_counts": coll_counts},
+        "n_computations": len(comps),
+        "max_trip": max(trips.values()) if trips else 1,
+    }
+
+
+def top_contributors(hlo: str, *, kind: str = "traffic",
+                     n: int = 20) -> list[tuple[float, str]]:
+    """Largest per-instruction contributors (bytes or collective bytes),
+    with op metadata so the source line is identifiable.  The hillclimb's
+    'profile' — run on a dry-run cell's dumped HLO."""
+    comps = split_computations(hlo)
+    trips = _trip_counts(comps)
+    mults = _multipliers(comps, trips)
+    fused = set(mults.pop("__fused__"))
+
+    def _fusion_root(ins):
+        fm = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+        if fm and fm.group(1) in comps:
+            sub = comps[fm.group(1)]
+            return sub.instrs[-1] if sub.instrs else None
+        return None
+
+    out = []
+    for cname, c in comps.items():
+        m = mults.get(cname, 1)
+        control = cname not in fused
+        for ins in c.instrs:
+            meta = re.search(r'op_name="([^"]*)"', ins.rest)
+            label = (meta.group(1)[:90] if meta else ins.name[:60])
+            if kind == "collective":
+                for ck in _COLLECTIVES:
+                    if ins.op == ck or ins.op.startswith(ck + "-start"):
+                        b = _shape_bytes(ins.shape)
+                        wire = 2 * b if ck == "all-reduce" else b
+                        out.append((wire * m, f"{ck} x{m} {ins.shape[:48]} "
+                                    f"{label}"))
+                        break
+                continue
+            if not control or ins.op in _SKIP_OPS or ins.op == "while":
+                continue
+            out_b = _shape_bytes(ins.shape)
+            refs = re.findall(r"%([\w\.\-]+)", ins.rest)[:8]
+            if ins.op == "dynamic-slice":
+                b = 2.0 * out_b
+            else:
+                root = _fusion_root(ins) if ins.op == "fusion" else None
+                if ins.op == "dynamic-update-slice" or (
+                        root is not None
+                        and root.op == "dynamic-update-slice"):
+                    continue   # in-place; negligible after the DUS rule
+                b = float(out_b)
+                for r2 in refs:
+                    if r2 in c.defs:
+                        b += _shape_bytes(c.defs[r2])
+            out.append((b * m, f"{ins.op} x{m} {ins.shape[:48]} {label}"))
+    out.sort(reverse=True)
+    return out[:n]

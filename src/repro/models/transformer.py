@@ -1,0 +1,844 @@
+"""Unified transformer/SSM model covering every assigned architecture.
+
+A model is a sequence of :class:`Pattern` groups; each pattern is ``repeats``
+copies of a heterogeneous stage list (e.g. gemma3 = 4×[5 local, 1 global] +
+[2 local]).  Both the repeat dimension and each stage's layer dimension are
+``lax.scan``-ed, so the compiled HLO contains one body per *stage kind*, not
+per layer — essential for compiling 100-layer models on the 512-device
+dry-run mesh in reasonable time.
+
+Parameters, sharding specs, and decode caches are all produced by one
+structure builder (`_build_params`) so they can never drift apart.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models.layers import NO_SHARD, ShardingRules, shard
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    kind: str                 # attn | attn_cross | cross | mamba | hybrid | enc
+    count: int
+    window: int = 0           # 0 = global attention
+
+
+@dataclasses.dataclass(frozen=True)
+class Pattern:
+    repeats: int
+    stages: tuple[StageSpec, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str               # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    patterns: tuple[Pattern, ...]
+    head_dim: int = 0         # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    activation: str = "silu"
+    glu: bool = True
+    norm: str = "rmsnorm"
+    norm_eps: float = 1e-6
+    norm_plus_one: bool = False
+    embed_scale: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10_000.0
+    use_rope: bool = True
+    max_position: int = 0     # >0 -> learned positions (whisper)
+    # MoE
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    moe_dense_residual: bool = False
+    capacity_factor: float = 1.25
+    # SSM
+    ssm_state: int = 0
+    d_inner: int = 0
+    dt_rank: int = 0
+    conv_kernel: int = 4
+    # cross-attention source (encoder frames / vision patches)
+    cross_seq: int = 0
+    encoder_layers: int = 0
+    param_dtype: str = "bfloat16"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def validate(self) -> None:
+        n = sum(p.repeats * sum(s.count for s in p.stages)
+                for p in self.patterns)
+        assert n == self.num_layers, (
+            f"{self.name}: pattern layers {n} != num_layers {self.num_layers}")
+
+
+def uniform_pattern(kind: str, n_layers: int, window: int = 0) -> tuple[Pattern, ...]:
+    return (Pattern(1, (StageSpec(kind, n_layers, window),)),)
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction (arrays, sharding specs, and counts from one builder)
+# ---------------------------------------------------------------------------
+
+# Mesh-axis sizes assumed by parameter PartitionSpecs.  pjit in_shardings
+# require exact divisibility (unlike activation constraints, which pad), so
+# the spec builder drops any axis that does not divide the dimension —
+# e.g. whisper's 51865-row embedding stays replicated.
+MESH_AXIS_SIZES = {"pod": 2, "data": 16, "model": 16}
+
+
+class _Maker:
+    """Builds leaves: either initialised arrays or PartitionSpecs."""
+
+    def __init__(self, cfg: ModelConfig, mode: str, key=None,
+                 stack: tuple[int, ...] = ()):
+        self.cfg, self.mode, self.key, self.stack = cfg, mode, key, stack
+
+    def with_stack(self, *dims: int) -> "_Maker":
+        return _Maker(self.cfg, self.mode, self.key, tuple(dims))
+
+    def _fit_spec(self, shape, spec):
+        out = []
+        for dim, ax in zip(shape, spec):
+            axes = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+            size = math.prod(MESH_AXIS_SIZES.get(a, 1) for a in axes)
+            out.append(ax if size and dim % size == 0 else None)
+        return tuple(out)
+
+    def __call__(self, name: str, shape: tuple[int, ...], spec: tuple,
+                 scale: float | None = None, dtype=None):
+        full_shape = self.stack + tuple(shape)
+        if self.mode == "spec":
+            spec = self._fit_spec(shape, spec)
+            return P(*((None,) * len(self.stack) + tuple(spec)))
+        dtype = dtype or self.cfg.dtype
+        if self.mode == "shape":
+            return jax.ShapeDtypeStruct(full_shape, dtype)
+        k = jax.random.fold_in(self.key, hash(name) % (2 ** 31))
+        if scale == 0.0:
+            return jnp.zeros(full_shape, dtype)
+        if scale is None:
+            scale = 1.0 / math.sqrt(shape[0] if len(shape) > 1 else 1)
+        return (jax.random.normal(k, full_shape, jnp.float32) * scale
+                ).astype(dtype)
+
+
+def _norm_params(mk: _Maker, name: str, cfg: ModelConfig):
+    if cfg.norm == "layernorm":
+        return {"scale": mk(f"{name}.s", (cfg.d_model,), (None,), 0.0) + 1.0
+                if mk.mode == "init" else mk(f"{name}.s", (cfg.d_model,), (None,)),
+                "bias": mk(f"{name}.b", (cfg.d_model,), (None,), 0.0)}
+    init = 0.0 if cfg.norm_plus_one else None
+    s = mk(f"{name}.s", (cfg.d_model,), (None,), init)
+    if mk.mode == "init" and not cfg.norm_plus_one:
+        s = jnp.ones_like(s)
+    return {"scale": s}
+
+
+def _attn_params(mk: _Maker, name: str, cfg: ModelConfig,
+                 cross: bool = False):
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    t, f = "model", "data"
+    p = {
+        "wq": mk(f"{name}.wq", (D, H * hd), (f, t)),
+        "wk": mk(f"{name}.wk", (D, KV * hd), (f, t)),
+        "wv": mk(f"{name}.wv", (D, KV * hd), (f, t)),
+        "wo": mk(f"{name}.wo", (H * hd, D), (t, f)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = mk(f"{name}.bq", (H * hd,), (t,), 0.0)
+        p["bk"] = mk(f"{name}.bk", (KV * hd,), (t,), 0.0)
+        p["bv"] = mk(f"{name}.bv", (KV * hd,), (t,), 0.0)
+    return p
+
+
+def _mlp_params(mk: _Maker, name: str, cfg: ModelConfig, d_ff: int | None = None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    p = {"up": mk(f"{name}.up", (D, F), ("data", "model")),
+         "down": mk(f"{name}.down", (F, D), ("model", "data"))}
+    if cfg.glu:
+        p["gate"] = mk(f"{name}.gate", (D, F), ("data", "model"))
+    return p
+
+
+def _moe_params(mk: _Maker, name: str, cfg: ModelConfig):
+    D, E, F = cfg.d_model, cfg.moe_experts, cfg.moe_d_ff
+    p = {"router": mk(f"{name}.router", (D, E), (None, None)),
+         "up": mk(f"{name}.moe_up", (E, D, F), ("model", "data", None)),
+         "down": mk(f"{name}.moe_down", (E, F, D), ("model", "data", None))}
+    if cfg.glu:
+        p["gate"] = mk(f"{name}.moe_gate", (E, D, F), ("model", "data", None))
+    return p
+
+
+def _mamba_params(mk: _Maker, name: str, cfg: ModelConfig):
+    D, di, N, R, K = (cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank,
+                      cfg.conv_kernel)
+    p = {
+        "in_proj": mk(f"{name}.in", (D, 2 * di), ("data", "model")),
+        "conv_w": mk(f"{name}.convw", (K, di), (None, "model")),
+        "conv_b": mk(f"{name}.convb", (di,), ("model",), 0.0),
+        "x_proj": mk(f"{name}.xproj", (di, R + 2 * N), ("model", None)),
+        "dt_proj": mk(f"{name}.dtproj", (R, di), (None, "model")),
+        "dt_bias": mk(f"{name}.dtbias", (di,), ("model",), 0.0),
+        "A_log": mk(f"{name}.alog", (di, N), ("model", None), 0.0),
+        "D": mk(f"{name}.dskip", (di,), ("model",), 0.0),
+        "out_proj": mk(f"{name}.out", (di, D), ("model", "data")),
+    }
+    if mk.mode == "init":
+        # A = -exp(A_log) must be negative & spread: A_log = log(1..N)
+        base = jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))
+        p["A_log"] = jnp.broadcast_to(base, p["A_log"].shape).astype(
+            jnp.float32)
+        p["D"] = jnp.ones_like(p["D"], jnp.float32)
+        p["dt_bias"] = jnp.full_like(p["dt_bias"], -4.0, jnp.float32)
+    return p
+
+
+def _ffn_params(mk: _Maker, name: str, cfg: ModelConfig):
+    """The per-layer FFN: dense MLP, MoE, or MoE + dense residual (arctic)."""
+    if cfg.moe_experts:
+        p = {"moe": _moe_params(mk, name, cfg)}
+        if cfg.moe_dense_residual:
+            p["mlp"] = _mlp_params(mk, name + ".res", cfg)
+        return p
+    return {"mlp": _mlp_params(mk, name, cfg)}
+
+
+def _layer_params(mk: _Maker, name: str, cfg: ModelConfig, kind: str):
+    p: dict[str, Any] = {"ln1": _norm_params(mk, f"{name}.ln1", cfg)}
+    if kind in ("attn", "enc"):
+        p["attn"] = _attn_params(mk, f"{name}.attn", cfg)
+        p["ln2"] = _norm_params(mk, f"{name}.ln2", cfg)
+        p.update(_ffn_params(mk, f"{name}.ffn", cfg))
+    elif kind == "attn_cross":
+        p["attn"] = _attn_params(mk, f"{name}.attn", cfg)
+        p["lnx"] = _norm_params(mk, f"{name}.lnx", cfg)
+        p["xattn"] = _attn_params(mk, f"{name}.xattn", cfg, cross=True)
+        p["ln2"] = _norm_params(mk, f"{name}.ln2", cfg)
+        p.update(_ffn_params(mk, f"{name}.ffn", cfg))
+    elif kind == "cross":
+        p["xattn"] = _attn_params(mk, f"{name}.xattn", cfg, cross=True)
+        p["gate_attn"] = mk(f"{name}.ga", (), (), 0.0, dtype=jnp.float32)
+        p["gate_mlp"] = mk(f"{name}.gm", (), (), 0.0, dtype=jnp.float32)
+        p["ln2"] = _norm_params(mk, f"{name}.ln2", cfg)
+        p.update(_ffn_params(mk, f"{name}.ffn", cfg))
+    elif kind == "mamba":
+        p["mixer"] = _mamba_params(mk, f"{name}.mixer", cfg)
+    elif kind == "hybrid":
+        p["attn"] = _attn_params(mk, f"{name}.attn", cfg)
+        p["mixer"] = _mamba_params(mk, f"{name}.mixer", cfg)
+        p["attn_norm"] = mk(f"{name}.an", (cfg.d_model,), (None,))
+        p["ssm_norm"] = mk(f"{name}.sn", (cfg.d_model,), (None,))
+        if mk.mode == "init":
+            p["attn_norm"] = jnp.ones_like(p["attn_norm"])
+            p["ssm_norm"] = jnp.ones_like(p["ssm_norm"])
+        p["ln2"] = _norm_params(mk, f"{name}.ln2", cfg)
+        p.update(_ffn_params(mk, f"{name}.ffn", cfg))
+    else:
+        raise ValueError(f"unknown layer kind {kind}")
+    return p
+
+
+def _build_params(cfg: ModelConfig, mode: str, key=None):
+    mk = _Maker(cfg, mode, key)
+    params: dict[str, Any] = {
+        "embed": mk("embed", (cfg.vocab_size, cfg.d_model), ("model", None),
+                    scale=1.0),
+        "final_norm": _norm_params(mk, "final_norm", cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = mk("lm_head", (cfg.d_model, cfg.vocab_size),
+                               ("data", "model"))
+    if cfg.max_position:
+        params["pos_embed"] = mk("pos_embed",
+                                 (cfg.max_position, cfg.d_model),
+                                 (None, None), scale=0.02)
+    blocks = []
+    for pi, pat in enumerate(cfg.patterns):
+        stages = []
+        for si, st in enumerate(pat.stages):
+            smk = mk.with_stack(pat.repeats, st.count)
+            stages.append(_layer_params(smk, f"p{pi}.s{si}", cfg, st.kind))
+        blocks.append(stages)
+    params["blocks"] = blocks
+    if cfg.encoder_layers:
+        enc_stage = mk.with_stack(1, cfg.encoder_layers)
+        params["encoder"] = {
+            "pos_embed": mk("enc.pos", (cfg.cross_seq, cfg.d_model),
+                            (None, None), scale=0.02),
+            "blocks": [[_layer_params(enc_stage, "enc.s0", cfg, "enc")]],
+            "final_norm": _norm_params(mk, "enc.final_norm", cfg),
+        }
+    return params
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return _build_params(cfg, "init", key)
+
+
+def param_shapes(cfg: ModelConfig):
+    return _build_params(cfg, "shape")
+
+
+def param_specs(cfg: ModelConfig):
+    return _build_params(cfg, "spec")
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(math.prod(l.shape) for l in
+               jax.tree.leaves(param_shapes(cfg)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Parameters touched per token (MoE: top_k of moe_experts)."""
+    total = param_count(cfg)
+    if not cfg.moe_experts:
+        return total
+    expert_leaves = 0
+    shapes = param_shapes(cfg)
+    for blockset in shapes["blocks"]:
+        for stage in blockset:
+            moe = stage.get("moe")
+            if moe:
+                for nm in ("up", "down", "gate"):
+                    if nm in moe:
+                        expert_leaves += math.prod(moe[nm].shape)
+    active_experts = expert_leaves * cfg.moe_top_k / cfg.moe_experts
+    return int(total - expert_leaves + active_experts)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _ffn_apply(lp: dict, h: jax.Array, cfg: ModelConfig, rules, mesh):
+    if cfg.moe_experts:
+        out = L.moe_block(lp["moe"], h, n_experts=cfg.moe_experts,
+                          top_k=cfg.moe_top_k,
+                          capacity_factor=cfg.capacity_factor,
+                          activation=cfg.activation, glu=cfg.glu,
+                          mesh=mesh, rules=rules)
+        if cfg.moe_dense_residual:
+            out = out + L.mlp(lp["mlp"], h, activation=cfg.activation,
+                              glu=cfg.glu, rules=rules)
+        return out
+    return L.mlp(lp["mlp"], h, activation=cfg.activation, glu=cfg.glu,
+                 rules=rules)
+
+
+def _norm(lp, x, cfg):
+    return L.apply_norm(lp, x, kind=cfg.norm, eps=cfg.norm_eps,
+                        plus_one=cfg.norm_plus_one)
+
+
+def _gnorm(lp, x, cfg, rules):
+    """Norm + explicit gather over the SP axis, pinned at bf16.
+
+    Two constraints, not one: pinning the norm output *seq-sharded first*
+    and replicated second forces the SP all-gather to act on the bf16
+    value between the two pins.  With only the final (replicated) pin,
+    GSPMD propagates "replicated" backwards through the convert and
+    all-gathers the f32 intermediate inside the norm — measured 2× wire
+    bytes on every layer of llama-90b (§Perf).
+    """
+    h = _norm(lp, x, cfg)
+    h = shard(h, rules.act(rules.act_seq, None))
+    return shard(h, rules.act(None, None))
+
+
+def _layer_fwd(cfg: ModelConfig, spec: StageSpec, lp, x, *, positions,
+               cross_src, rules, mesh):
+    kind = spec.kind
+    if kind in ("attn", "enc", "attn_cross"):
+        if rules.seq_parallel_attn and rules.act_seq is not None:
+            # seq-parallel attention: the norm output stays seq-sharded
+            h = shard(_norm(lp["ln1"], x, cfg), rules.residual())
+        else:
+            h = _gnorm(lp["ln1"], x, cfg, rules)
+        a = L.self_attention(lp["attn"], h, n_heads=cfg.num_heads,
+                             n_kv=cfg.num_kv_heads, head_dim=cfg.hd,
+                             qkv_bias=cfg.qkv_bias, rope_theta=cfg.rope_theta,
+                             causal=(kind != "enc"), window=spec.window,
+                             positions=positions,
+                             use_rope=cfg.use_rope and kind != "enc",
+                             rules=rules)
+        x = x + a
+        if kind == "attn_cross":
+            h = _gnorm(lp["lnx"], x, cfg, rules)
+            c = L.cross_attention(lp["xattn"], h, cross_src,
+                                  n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                                  head_dim=cfg.hd, qkv_bias=cfg.qkv_bias,
+                                  rules=rules)
+            x = x + c
+        h = _gnorm(lp["ln2"], x, cfg, rules)
+        x = x + _ffn_apply(lp, h, cfg, rules, mesh)
+    elif kind == "cross":
+        h = _gnorm(lp["ln1"], x, cfg, rules)
+        c = L.cross_attention(lp["xattn"], h, cross_src,
+                              n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                              head_dim=cfg.hd, qkv_bias=cfg.qkv_bias,
+                              rules=rules)
+        x = x + jnp.tanh(lp["gate_attn"]).astype(x.dtype) * c
+        h = _gnorm(lp["ln2"], x, cfg, rules)
+        x = x + jnp.tanh(lp["gate_mlp"]).astype(x.dtype) * \
+            _ffn_apply(lp, h, cfg, rules, mesh)
+    elif kind == "mamba":
+        h = _gnorm(lp["ln1"], x, cfg, rules)
+        x = x + L.mamba_mixer(lp["mixer"], h, d_state=cfg.ssm_state,
+                              rules=rules)
+    elif kind == "hybrid":
+        h = _gnorm(lp["ln1"], x, cfg, rules)
+        a = L.self_attention(lp["attn"], h, n_heads=cfg.num_heads,
+                             n_kv=cfg.num_kv_heads, head_dim=cfg.hd,
+                             qkv_bias=cfg.qkv_bias, rope_theta=cfg.rope_theta,
+                             causal=True, window=spec.window,
+                             positions=positions, use_rope=cfg.use_rope,
+                             rules=rules)
+        m = L.mamba_mixer(lp["mixer"], h, d_state=cfg.ssm_state, rules=rules)
+        fused = 0.5 * (L.rms_norm(lp["attn_norm"], a, cfg.norm_eps) +
+                       L.rms_norm(lp["ssm_norm"], m, cfg.norm_eps))
+        x = x + fused
+        h = _gnorm(lp["ln2"], x, cfg, rules)
+        x = x + _ffn_apply(lp, h, cfg, rules, mesh)
+    else:
+        raise ValueError(kind)
+    return shard(x, rules.residual())
+
+
+def _run_patterns(cfg: ModelConfig, patterns, blocks, x, *, positions,
+                  cross_src, rules, mesh, remat: bool = True):
+    for pi, pat in enumerate(patterns):
+        stage_params = tuple(blocks[pi])
+
+        def repeat_body(x, xs, _pat=pat):
+            for j, spec in enumerate(_pat.stages):
+                fn = functools.partial(_layer_fwd, cfg, spec,
+                                       positions=positions,
+                                       cross_src=cross_src, rules=rules,
+                                       mesh=mesh)
+                if remat:
+                    fn = jax.checkpoint(
+                        lambda lp, h, _fn=fn: _fn(lp, h),
+                        policy=jax.checkpoint_policies.nothing_saveable)
+
+                def scan_body(h, lp, _fn=fn):
+                    return _fn(lp, h), None
+                x, _ = lax.scan(scan_body, x, xs[j])
+            return x, None
+
+        x, _ = lax.scan(repeat_body, x, stage_params)
+    return x
+
+
+def encode(cfg: ModelConfig, params, frames: jax.Array, *, rules=NO_SHARD,
+           mesh=None) -> jax.Array:
+    """Whisper-style encoder over precomputed conv-frontend frames."""
+    enc = params["encoder"]
+    x = frames.astype(cfg.dtype) + enc["pos_embed"][None, :frames.shape[1]]
+    x = shard(x, rules.residual())
+    pos = jnp.arange(frames.shape[1])
+    enc_patterns = (Pattern(1, (StageSpec("enc", cfg.encoder_layers, 0),)),)
+    x = _run_patterns(cfg, enc_patterns, enc["blocks"], x, positions=pos,
+                      cross_src=None, rules=rules, mesh=mesh)
+    return _norm(enc["final_norm"], x, cfg)
+
+
+def forward(cfg: ModelConfig, params, tokens: jax.Array, *,
+            cross_src: Optional[jax.Array] = None, rules=NO_SHARD,
+            mesh=None, remat: bool = True) -> jax.Array:
+    """Full-sequence forward -> final hidden states [B, S, D]."""
+    B, S = tokens.shape
+    x = L.embed(params["embed"], tokens, scale=cfg.embed_scale)
+    if cfg.max_position:
+        x = x + params["pos_embed"][None, :S]
+    x = shard(x, rules.residual())
+    positions = jnp.arange(S)
+    if cfg.encoder_layers and cross_src is not None:
+        cross_src = encode(cfg, params, cross_src, rules=rules, mesh=mesh)
+    x = _run_patterns(cfg, cfg.patterns, params["blocks"], x,
+                      positions=positions, cross_src=cross_src, rules=rules,
+                      mesh=mesh, remat=remat)
+    return _norm(params["final_norm"], x, cfg)
+
+
+def logits_from_hidden(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    return L.lm_logits(params, x, tied=cfg.tie_embeddings)
+
+
+def lm_loss(cfg: ModelConfig, params, tokens: jax.Array, *,
+            cross_src=None, rules=NO_SHARD, mesh=None,
+            loss_chunk: int = 1024) -> jax.Array:
+    """Next-token CE, computed in sequence chunks so [B,S,V] fp32 logits are
+    never fully materialised (matters for 262k vocabs at 4k×256 tokens)."""
+    hidden = forward(cfg, params, tokens, cross_src=cross_src, rules=rules,
+                     mesh=mesh)
+    h = hidden[:, :-1]
+    targets = tokens[:, 1:]
+    B, S, D = h.shape
+    n_chunks = -(-S // loss_chunk)
+    pad = n_chunks * loss_chunk - S
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+    hc = h.reshape(B, n_chunks, loss_chunk, D).swapaxes(0, 1)
+    tc = targets.reshape(B, n_chunks, loss_chunk).swapaxes(0, 1)
+    valid = (jnp.arange(n_chunks * loss_chunk) < S).reshape(
+        n_chunks, loss_chunk)
+
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+    @jax.checkpoint
+    def chunk_loss(hb, tb, vb):
+        logits = (hb @ w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # vocab-parallel target logit: one-hot contraction partitions cleanly
+        # over a vocab-sharded logits tensor (take_along_axis would force an
+        # all-gather of the full [B, chunk, V] logits).
+        onehot = jax.nn.one_hot(tb, logits.shape[-1], dtype=logits.dtype)
+        tgt = jnp.einsum("bsv,bsv->bs", logits, onehot)
+        return jnp.sum((lse - tgt) * vb[None])
+
+    def body(acc, xs):
+        hb, tb, vb = xs
+        return acc + chunk_loss(hb, tb, vb), None
+
+    total, _ = lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc, valid))
+    return total / (B * S)
+
+
+# ---------------------------------------------------------------------------
+# Decode path (KV caches / SSM state)
+# ---------------------------------------------------------------------------
+
+def _cache_stage(cfg: ModelConfig, spec: StageSpec, mk: Callable, *,
+                 batch: int, max_seq: int, rules: ShardingRules):
+    """Cache arrays for one stage; mk(name, shape, spec_tuple, dtype)."""
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    slen = min(spec.window, max_seq) if spec.window else max_seq
+    seq_ax = rules.seq
+    c: dict[str, Any] = {}
+    if spec.kind in ("attn", "attn_cross", "hybrid"):
+        kv_spec = (rules.batch, seq_ax, None, None)
+        c["k"] = mk("k", (batch, slen, KV, hd), kv_spec, cfg.dtype)
+        c["v"] = mk("v", (batch, slen, KV, hd), kv_spec, cfg.dtype)
+    if spec.kind in ("attn_cross", "cross"):
+        xk_spec = (rules.batch, None, None, None)
+        c["xk"] = mk("xk", (batch, cfg.cross_seq, KV, hd), xk_spec, cfg.dtype)
+        c["xv"] = mk("xv", (batch, cfg.cross_seq, KV, hd), xk_spec, cfg.dtype)
+    if spec.kind in ("mamba", "hybrid"):
+        di = cfg.d_inner
+        c["conv"] = mk("conv", (batch, cfg.conv_kernel - 1, di),
+                       (rules.batch, None, "model"), cfg.dtype)
+        c["ssm"] = mk("ssm", (batch, di, cfg.ssm_state),
+                      (rules.batch, "model", None), jnp.float32)
+    return c
+
+
+def _build_cache(cfg: ModelConfig, mode: str, *, batch: int, max_seq: int,
+                 rules: ShardingRules):
+    def make(stack):
+        def mk(name, shape, spec, dtype):
+            full = stack + tuple(shape)
+            if mode == "spec":
+                return P(*((None,) * len(stack) + tuple(spec)))
+            return jax.ShapeDtypeStruct(full, dtype) if mode == "shape" \
+                else jnp.zeros(full, dtype)
+        return mk
+
+    cache = []
+    for pat in cfg.patterns:
+        stages = []
+        for st in pat.stages:
+            stages.append(_cache_stage(cfg, st, make((pat.repeats, st.count)),
+                                       batch=batch, max_seq=max_seq,
+                                       rules=rules))
+        cache.append(stages)
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               rules: ShardingRules = NO_SHARD):
+    return _build_cache(cfg, "init", batch=batch, max_seq=max_seq,
+                        rules=rules)
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_seq: int,
+                 rules: ShardingRules = NO_SHARD):
+    return _build_cache(cfg, "shape", batch=batch, max_seq=max_seq,
+                        rules=rules)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                rules: ShardingRules):
+    return _build_cache(cfg, "spec", batch=batch, max_seq=max_seq,
+                        rules=rules)
+
+
+def _layer_decode(cfg: ModelConfig, spec: StageSpec, lp, cache, x, *,
+                  pos, rules, mesh):
+    kind = spec.kind
+    new_cache = dict(cache)
+    if kind in ("attn", "attn_cross", "hybrid"):
+        h = _gnorm(lp["ln1"], x, cfg, rules)
+        a, ck, cv = L.decode_self_attention(
+            lp["attn"], h, cache["k"], cache["v"], pos,
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, head_dim=cfg.hd,
+            qkv_bias=cfg.qkv_bias, rope_theta=cfg.rope_theta,
+            window=spec.window, use_rope=cfg.use_rope, rules=rules)
+        new_cache["k"], new_cache["v"] = ck, cv
+        if kind == "hybrid":
+            m, cc, cs = L.mamba_decode(lp["mixer"], h, cache["conv"],
+                                       cache["ssm"], d_state=cfg.ssm_state,
+                                       rules=rules)
+            new_cache["conv"], new_cache["ssm"] = cc, cs
+            fused = 0.5 * (L.rms_norm(lp["attn_norm"], a, cfg.norm_eps) +
+                           L.rms_norm(lp["ssm_norm"], m, cfg.norm_eps))
+            x = x + fused
+        else:
+            x = x + a
+        if kind == "attn_cross":
+            h = _gnorm(lp["lnx"], x, cfg, rules)
+            c = L.cross_attention(lp["xattn"], h, (cache["xk"], cache["xv"]),
+                                  n_heads=cfg.num_heads,
+                                  n_kv=cfg.num_kv_heads, head_dim=cfg.hd,
+                                  qkv_bias=cfg.qkv_bias, rules=rules)
+            x = x + c
+        h = _gnorm(lp["ln2"], x, cfg, rules)
+        x = x + _ffn_apply(lp, h, cfg, rules, mesh)
+    elif kind == "cross":
+        h = _gnorm(lp["ln1"], x, cfg, rules)
+        c = L.cross_attention(lp["xattn"], h, (cache["xk"], cache["xv"]),
+                              n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                              head_dim=cfg.hd, qkv_bias=cfg.qkv_bias,
+                              rules=rules)
+        x = x + jnp.tanh(lp["gate_attn"]).astype(x.dtype) * c
+        h = _gnorm(lp["ln2"], x, cfg, rules)
+        x = x + jnp.tanh(lp["gate_mlp"]).astype(x.dtype) * \
+            _ffn_apply(lp, h, cfg, rules, mesh)
+    elif kind == "mamba":
+        h = _gnorm(lp["ln1"], x, cfg, rules)
+        m, cc, cs = L.mamba_decode(lp["mixer"], h, cache["conv"],
+                                   cache["ssm"], d_state=cfg.ssm_state,
+                                   rules=rules)
+        new_cache["conv"], new_cache["ssm"] = cc, cs
+        x = x + m
+    else:
+        raise ValueError(kind)
+    return shard(x, rules.residual()), new_cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens: jax.Array,
+                pos: jax.Array, *, rules=NO_SHARD, mesh=None):
+    """One-token decode.  tokens: [B, 1]; pos: scalar int32 (aligned batch).
+
+    Returns (logits [B, V] fp32, new_cache).
+    """
+    x = L.embed(params["embed"], tokens, scale=cfg.embed_scale)
+    if cfg.max_position:
+        x = x + lax.dynamic_slice_in_dim(params["pos_embed"], pos, 1)[None]
+    x = shard(x, rules.residual())
+    new_cache = []
+    for pi, pat in enumerate(cfg.patterns):
+        stage_params = tuple(params["blocks"][pi])
+        stage_caches = tuple(cache[pi])
+
+        def repeat_body(x, xs, _pat=pat):
+            lps, cjs = xs
+            outs = []
+            for j, spec in enumerate(_pat.stages):
+                def scan_body(h, xs2, _spec=spec):
+                    lp, cj = xs2
+                    return _layer_decode(cfg, _spec, lp, cj, h, pos=pos,
+                                         rules=rules, mesh=mesh)
+                x, cj_new = lax.scan(scan_body, x, (lps[j], cjs[j]))
+                outs.append(cj_new)
+            return x, tuple(outs)
+
+        x, pat_caches = lax.scan(repeat_body, x,
+                                 (stage_params, stage_caches))
+        new_cache.append(list(pat_caches))
+    x = _norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(cfg, params, x)[:, 0]
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full forward that also fills the decode caches
+# ---------------------------------------------------------------------------
+
+def prefill_step(cfg: ModelConfig, params, tokens: jax.Array, *,
+                 max_seq: int | None = None, cross_src=None, rules=NO_SHARD,
+                 mesh=None):
+    """Forward over the prompt; returns (last-token logits, filled cache).
+
+    ``max_seq`` sizes the cache (>= prompt length); defaults to the prompt
+    length for the pure-prefill dry-run cells.  Windowed layers fill their
+    ring buffers at ring-consistent slots (slot = position % window) so a
+    subsequent ``decode_step`` continues seamlessly.
+    """
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    x = L.embed(params["embed"], tokens, scale=cfg.embed_scale)
+    if cfg.max_position:
+        x = x + params["pos_embed"][None, :S]
+    x = shard(x, rules.residual())
+    positions = jnp.arange(S)
+    if cfg.encoder_layers and cross_src is not None:
+        cross_src = encode(cfg, params, cross_src, rules=rules, mesh=mesh)
+
+    cache = []
+    for pi, pat in enumerate(cfg.patterns):
+        stage_params = tuple(params["blocks"][pi])
+
+        def repeat_body(x, lps, _pat=pat):
+            outs = []
+            for j, spec in enumerate(_pat.stages):
+                def scan_body(h, lp, _spec=spec):
+                    h2, c = _layer_prefill(cfg, _spec, lp, h,
+                                           positions=positions,
+                                           max_seq=max_seq,
+                                           cross_src=cross_src, rules=rules,
+                                           mesh=mesh)
+                    return h2, c
+                x, cs = lax.scan(scan_body, x, lps[j])
+                outs.append(cs)
+            return x, tuple(outs)
+
+        x, pat_caches = lax.scan(repeat_body, x, stage_params)
+        cache.append(list(pat_caches))
+    x = _norm(params["final_norm"], x, cfg)
+    logits = logits_from_hidden(cfg, params, x[:, -1:])[:, 0]
+    return logits, cache
+
+
+def _fill_kv_cache(k: jax.Array, window: int, S: int, max_seq: int):
+    """Place prefill K/V rows at the slots decode_step expects.
+
+    Global layers: slots 0..S-1 of a max_seq cache.  Windowed layers: ring
+    buffer of size W=min(window, max_seq); position p lives at slot p % W.
+    """
+    if not window:
+        if max_seq > S:
+            k = jnp.pad(k, ((0, 0), (0, max_seq - S), (0, 0), (0, 0)))
+        return k
+    W = min(window, max_seq)
+    if S < W:
+        return jnp.pad(k, ((0, 0), (0, W - S), (0, 0), (0, 0)))
+    kw = k[:, S - W:]
+    shift = S % W            # position S-W+j -> slot (S-W+j) % W
+    return jnp.roll(kw, shift, axis=1)
+
+
+def _layer_prefill(cfg: ModelConfig, spec: StageSpec, lp, x, *, positions,
+                   max_seq, cross_src, rules, mesh):
+    """Like _layer_fwd but emits this layer's cache contribution."""
+    S = x.shape[1]
+    cache: dict[str, Any] = {}
+    kind = spec.kind
+    if kind in ("attn", "attn_cross", "hybrid"):
+        h = _gnorm(lp["ln1"], x, cfg, rules)
+        q, k, v = L._qkv(lp["attn"], h, n_heads=cfg.num_heads,
+                         n_kv=cfg.num_kv_heads, head_dim=cfg.hd,
+                         qkv_bias=cfg.qkv_bias)
+        if cfg.use_rope:
+            q = L.rope(q, positions, cfg.rope_theta)
+            k = L.rope(k, positions, cfg.rope_theta)
+        kf = L._repeat_kv(k, cfg.num_heads)
+        vf = L._repeat_kv(v, cfg.num_heads)
+        if S > 8192:
+            o = L.chunked_attention(q, kf, vf, causal=True,
+                                    window=spec.window)
+        else:
+            o = L.attention_core(q, kf, vf, causal=True, window=spec.window)
+        a = o.reshape(x.shape[0], S, -1) @ lp["attn"]["wo"]
+        a = shard(a, rules.residual())
+        cache["k"] = shard(
+            _fill_kv_cache(k.astype(cfg.dtype), spec.window, S, max_seq),
+            rules.act(rules.seq, None, None))
+        cache["v"] = shard(
+            _fill_kv_cache(v.astype(cfg.dtype), spec.window, S, max_seq),
+            rules.act(rules.seq, None, None))
+        if kind == "hybrid":
+            m, conv_state, ssm_state = _mamba_prefill(cfg, lp["mixer"], h)
+            cache["conv"], cache["ssm"] = conv_state, ssm_state
+            fused = 0.5 * (L.rms_norm(lp["attn_norm"], a, cfg.norm_eps) +
+                           L.rms_norm(lp["ssm_norm"], m, cfg.norm_eps))
+            x = x + fused
+        else:
+            x = x + a
+        if kind == "attn_cross":
+            h = _gnorm(lp["lnx"], x, cfg, rules)
+            xk, xv = L.project_cross_kv(lp["xattn"], cross_src,
+                                        n_kv=cfg.num_kv_heads,
+                                        head_dim=cfg.hd,
+                                        qkv_bias=cfg.qkv_bias)
+            cache["xk"], cache["xv"] = (xk.astype(cfg.dtype),
+                                        xv.astype(cfg.dtype))
+            c = L.cross_attention(lp["xattn"], h, (xk, xv),
+                                  n_heads=cfg.num_heads,
+                                  n_kv=cfg.num_kv_heads, head_dim=cfg.hd,
+                                  qkv_bias=cfg.qkv_bias, rules=rules)
+            x = x + c
+        h = _gnorm(lp["ln2"], x, cfg, rules)
+        x = x + _ffn_apply(lp, h, cfg, rules, mesh)
+    elif kind == "cross":
+        h = _gnorm(lp["ln1"], x, cfg, rules)
+        xk, xv = L.project_cross_kv(lp["xattn"], cross_src,
+                                    n_kv=cfg.num_kv_heads, head_dim=cfg.hd,
+                                    qkv_bias=cfg.qkv_bias)
+        cache["xk"], cache["xv"] = xk.astype(cfg.dtype), xv.astype(cfg.dtype)
+        c = L.cross_attention(lp["xattn"], h, (xk, xv),
+                              n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+                              head_dim=cfg.hd, qkv_bias=cfg.qkv_bias,
+                              rules=rules)
+        x = x + jnp.tanh(lp["gate_attn"]).astype(x.dtype) * c
+        h = _gnorm(lp["ln2"], x, cfg, rules)
+        x = x + jnp.tanh(lp["gate_mlp"]).astype(x.dtype) * \
+            _ffn_apply(lp, h, cfg, rules, mesh)
+    elif kind == "mamba":
+        h = _gnorm(lp["ln1"], x, cfg, rules)
+        m, conv_state, ssm_state = _mamba_prefill(cfg, lp["mixer"], h)
+        cache["conv"], cache["ssm"] = conv_state, ssm_state
+        x = x + m
+    else:
+        raise ValueError(kind)
+    return shard(x, rules.residual()), cache
+
+
+def _mamba_prefill(cfg: ModelConfig, mp, h):
+    """Mamba over the prompt, returning output + final (conv, ssm) states."""
+    xz = h @ mp["in_proj"]
+    xc, z = jnp.split(xz, 2, axis=-1)
+    xc_conv = jax.nn.silu(L._causal_conv(xc, mp["conv_w"], mp["conv_b"]))
+    dt, Bc, Cc = L._ssm_params(mp, xc_conv, d_state=cfg.ssm_state)
+    y, h_last = L.selective_scan(xc_conv, dt, Bc, Cc, mp["A_log"], mp["D"])
+    y = y * jax.nn.silu(z)
+    out = y @ mp["out_proj"]
+    conv_state = xc[:, -(cfg.conv_kernel - 1):].astype(cfg.dtype)
+    return out, conv_state, h_last

@@ -1,0 +1,199 @@
+"""Optimizers: AdamW (configurable state dtype) and factored Adafactor.
+
+Functional, pytree-shaped, sharding-aware: ``init_specs`` mirrors a
+parameter PartitionSpec tree onto the optimizer state so the dry-run can
+declare in_shardings for 480B-parameter states without materialising them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # init_specs(param_specs, param_shapes) -> state PartitionSpec tree
+    init_specs: Callable[[Any, Any], Any]
+
+
+def _tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr: float | Callable = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          state_dtype: str = "bfloat16", max_grad_norm: float = 1.0
+          ) -> Optimizer:
+    dtype = jnp.dtype(state_dtype)
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, dtype)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def init_specs(param_specs, param_shapes=None):
+        return {"m": param_specs, "v": param_specs, "count": P()}
+
+    def update(grads, state, params, step):
+        if max_grad_norm:
+            grads, _ = clip_by_global_norm(grads, max_grad_norm)
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+        lr_t = lr_fn(step)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u, m32.astype(dtype), v32.astype(dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda o: isinstance(o, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda o: isinstance(o, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda o: isinstance(o, tuple))
+        return updates, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update, init_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no momentum) — for the ≥100B archs
+# ---------------------------------------------------------------------------
+
+def _factored(p_shape) -> bool:
+    return len(p_shape) >= 2 and p_shape[-1] > 1 and p_shape[-2] > 1
+
+
+def adafactor(lr: float | Callable = 1e-3, decay: float = 0.8,
+              eps: float = 1e-30, clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment optimizer.  The factor state is stored as a
+    *list aligned with the flattened parameter order* (not a mirrored dict
+    tree): per-leaf dicts inside a mirrored tree would need is_leaf
+    sentinels that collide with user parameter names."""
+    lr_fn = lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+    def _leaf_state(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                    jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    def init(params):
+        return {"f": [_leaf_state(p) for p in jax.tree.leaves(params)],
+                "count": jnp.zeros((), jnp.int32)}
+
+    def init_specs(param_specs, param_shapes):
+        # Factor specs follow the parameter spec with the reduced dim dropped.
+        specs = jax.tree.leaves(
+            param_specs, is_leaf=lambda x: isinstance(x, P) or x is None)
+        shapes = jax.tree.leaves(param_shapes)
+        out = []
+        for spec, shp in zip(specs, shapes):
+            spec_t = tuple(spec) if spec is not None else ()
+            spec_t = spec_t + (None,) * (len(shp.shape) - len(spec_t))
+
+            def drop(i, s=spec_t):
+                s = list(s)
+                if len(s) >= abs(i):
+                    del s[i]
+                return P(*s)
+
+            if _factored(shp.shape):
+                out.append({"vr": drop(-1), "vc": drop(-2)})
+            else:
+                out.append({"v": P(*spec_t)})
+        return {"f": out, "count": P()}
+
+    def update(grads, state, params, step):
+        count = state["count"] + 1
+        c = count.astype(jnp.float32)
+        beta = 1.0 - c ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, st, p):
+            if "vr" in st:
+                # two independent square+reduce expressions so each fuses —
+                # never materialise the full fp32 square of a 480B gradient.
+                row = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1) + eps
+                col = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-2) + eps
+                vr = beta * st["vr"] + (1 - beta) * row
+                vc = beta * st["vc"] + (1 - beta) * col
+                denom = (vr[..., None] / jnp.mean(
+                    vr, axis=-1, keepdims=True)[..., None]) * vc[..., None, :]
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                g32 = jnp.square(g.astype(jnp.float32)) + eps
+                denom = beta * st["v"] + (1 - beta) * g32
+                new_st = {"v": denom}
+            u = g.astype(jnp.float32) * jax.lax.rsqrt(denom + eps)
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * u, new_st
+
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = jax.tree.leaves(params)
+        pairs = [upd(g, st, p) for g, st, p
+                 in zip(g_leaves, state["f"], p_leaves)]
+        updates = treedef.unflatten([o[0] for o in pairs])
+        new_f = [o[1] for o in pairs]
+        return updates, {"f": new_f, "count": count}
+
+    return Optimizer(init, update, init_specs)
+
+
+def make_optimizer(name: str, *, state_dtype: str = "bfloat16",
+                   lr=None) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr or 3e-4, state_dtype=state_dtype)
+    if name == "adafactor":
+        return adafactor(lr=lr or 1e-3)
+    raise ValueError(f"unknown optimizer {name}")

@@ -1,0 +1,29 @@
+"""Serving steps: prefill (prompt → cache) and decode (one token)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.layers import NO_SHARD
+
+
+def make_prefill_step(cfg: T.ModelConfig, *, rules=NO_SHARD, mesh=None,
+                      max_seq: int | None = None):
+    def prefill_step(params, tokens, cross_src=None):
+        return T.prefill_step(cfg, params, tokens, max_seq=max_seq,
+                              cross_src=cross_src, rules=rules, mesh=mesh)
+    return prefill_step
+
+
+def make_decode_step(cfg: T.ModelConfig, *, rules=NO_SHARD, mesh=None,
+                     sample: bool = False, temperature: float = 1.0):
+    def decode_step(params, cache, tokens, pos, rng=None):
+        logits, cache = T.decode_step(cfg, params, cache, tokens, pos,
+                                      rules=rules, mesh=mesh)
+        if sample:
+            next_tok = jax.random.categorical(rng, logits / temperature)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok.astype(jnp.int32), logits, cache
+    return decode_step

@@ -1,0 +1,131 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.pq_adc import adc_distance_pallas
+from repro.kernels.rerank_l2 import rerank_l2_pallas
+from repro.kernels.topk_pool import pool_merge_pallas
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# pq_adc
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [8, 32, 128])
+@pytest.mark.parametrize("b", [1, 100, 257, 512])
+def test_adc_shapes(m, b):
+    lut = jax.random.uniform(KEY, (m, 256))
+    codes = jax.random.randint(KEY, (b, m), 0, 256).astype(jnp.uint8)
+    got = ops.adc_distance(lut, codes)
+    np.testing.assert_allclose(got, ref.adc_distance_ref(lut, codes),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("block_b", [32, 128, 512])
+def test_adc_block_sweep(block_b):
+    lut = jax.random.uniform(KEY, (16, 256))
+    codes = jax.random.randint(KEY, (300, 16), 0, 256).astype(jnp.uint8)
+    got = adc_distance_pallas(lut, codes, block_b=block_b, interpret=True)
+    np.testing.assert_allclose(got, ref.adc_distance_ref(lut, codes),
+                               rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.sampled_from([4, 16, 64]), b=st.integers(1, 80),
+       seed=st.integers(0, 2 ** 16))
+def test_adc_hypothesis(m, b, seed):
+    k = jax.random.PRNGKey(seed)
+    lut = jax.random.uniform(k, (m, 256), minval=0.0, maxval=100.0)
+    codes = jax.random.randint(k, (b, m), 0, 256).astype(jnp.uint8)
+    got = adc_distance_pallas(lut, codes, interpret=True)
+    np.testing.assert_allclose(got, ref.adc_distance_ref(lut, codes),
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rerank_l2
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("d", [32, 96, 768])
+@pytest.mark.parametrize("p,group", [(1, 1), (40, 4), (100, 8), (99, 16)])
+def test_rerank_shapes(d, p, group):
+    q = jax.random.normal(KEY, (d,))
+    xs = jax.random.normal(jax.random.fold_in(KEY, 1), (p, d))
+    got = ops.rerank_l2(q, xs, group=group)
+    np.testing.assert_allclose(got, ref.rerank_l2_ref(q, xs), rtol=2e-4,
+                               atol=2e-3)
+
+
+def test_rerank_dtype_bf16_inputs():
+    q = jax.random.normal(KEY, (64,)).astype(jnp.bfloat16)
+    xs = jax.random.normal(KEY, (33, 64)).astype(jnp.bfloat16)
+    got = ops.rerank_l2(q, xs, group=8)
+    want = ref.rerank_l2_ref(q, xs)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=1e-1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(p=st.integers(1, 60), d=st.sampled_from([8, 64, 256]),
+       group=st.sampled_from([1, 4, 8]), seed=st.integers(0, 2 ** 16))
+def test_rerank_hypothesis(p, d, group, seed):
+    k = jax.random.PRNGKey(seed)
+    q = jax.random.normal(k, (d,))
+    xs = jax.random.normal(jax.random.fold_in(k, 1), (p, d))
+    got = rerank_l2_pallas(q, xs, group=group, interpret=True)
+    np.testing.assert_allclose(got, ref.rerank_l2_ref(q, xs), rtol=2e-4,
+                               atol=2e-3)
+
+
+def test_rerank_self_distance_zero():
+    xs = jax.random.normal(KEY, (5, 32))
+    got = ops.rerank_l2(xs[2], xs)
+    assert float(got[2]) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# topk_pool
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("p,q", [(10, 10), (40, 64), (100, 300)])
+def test_merge_shapes(p, q):
+    pd = jax.random.uniform(KEY, (p,))
+    nd = jax.random.uniform(jax.random.fold_in(KEY, 3), (q,))
+    pi = jnp.arange(p, dtype=jnp.int32)
+    ni = 10_000 + jnp.arange(q, dtype=jnp.int32)
+    gd, gi = ops.pool_merge(pd, pi, nd, ni)
+    wd, wi = ref.pool_merge_ref(pd, pi, nd, ni)
+    np.testing.assert_allclose(gd, wd, rtol=1e-6)
+    np.testing.assert_array_equal(gi, wi)
+
+
+def test_merge_with_inf_padding():
+    INF = jnp.float32(3.4e38)
+    pd = jnp.array([1.0, 2.0, INF, INF])
+    pi = jnp.array([5, 6, -1, -1], jnp.int32)
+    nd = jnp.array([0.5, 3.0])
+    ni = jnp.array([7, 8], jnp.int32)
+    gd, gi = ops.pool_merge(pd, pi, nd, ni)
+    np.testing.assert_array_equal(gi, [7, 5, 6, 8])
+
+
+@settings(max_examples=15, deadline=None)
+@given(p=st.integers(2, 50), q=st.integers(1, 80),
+       seed=st.integers(0, 2 ** 16))
+def test_merge_hypothesis(p, q, seed):
+    k = jax.random.PRNGKey(seed)
+    pd = jax.random.uniform(k, (p,))
+    nd = jax.random.uniform(jax.random.fold_in(k, 1), (q,))
+    pi = jnp.arange(p, dtype=jnp.int32)
+    ni = 1000 + jnp.arange(q, dtype=jnp.int32)
+    gd, gi = pool_merge_pallas(pd, pi, nd, ni, interpret=True)
+    wd, wi = ref.pool_merge_ref(pd, pi, nd, ni)
+    np.testing.assert_allclose(gd, wd, rtol=1e-6)
+    np.testing.assert_array_equal(gi, wi)
+    # result sorted ascending
+    assert bool(jnp.all(jnp.diff(gd) >= 0))

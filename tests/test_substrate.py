@@ -1,0 +1,164 @@
+"""Data pipeline, checkpointing, optimizers, train-step substrate."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.data import TokenStream, insert_stream, make_clustered
+from repro.models import transformer as T
+from repro import configs as C
+from repro.train.optimizer import (adafactor, adamw, clip_by_global_norm,
+                                   cosine_schedule)
+from repro.train.train_step import init_opt_state, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_token_stream_deterministic():
+    s = TokenStream(vocab_size=101, seq_len=16, batch=4, seed=3)
+    a = s.make_batch(5)["tokens"]
+    b = s.make_batch(5)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    c = s.make_batch(6)["tokens"]
+    assert not np.array_equal(a, c)
+    d = s.make_batch(5, shard=1)["tokens"]
+    assert not np.array_equal(a, d)
+    assert int(a.max()) < 101 and int(a.min()) >= 0
+
+
+def test_clustered_corpus_shapes():
+    v, a, c = make_clustered(jax.random.PRNGKey(0), 200, 16, n_clusters=4)
+    assert v.shape == (200, 16) and c.shape == (4, 16)
+    drift0 = insert_stream(jax.random.PRNGKey(1), c, 50, drift=0.0)
+    assert drift0.shape == (50, 16)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_bf16(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+            "b": [jnp.float32(1.5), jnp.int32(7)],
+            "c": {"d": jnp.ones((4,), jnp.int8)}}
+    ckpt.save(tmp_path, 3, tree)
+    step, out = ckpt.load_latest(tmp_path, tree)
+    assert step == 3
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x, np.float32)
+                                      if x.dtype == jnp.bfloat16 else x,
+                                      np.asarray(y, np.float32)
+                                      if y.dtype == jnp.bfloat16 else y)
+
+
+def test_checkpoint_gc_and_latest(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(tmp_path, s, tree, keep=2)
+    dirs = sorted(d.name for d in tmp_path.iterdir() if d.is_dir())
+    assert dirs == ["step_00000004", "step_00000005"]
+    assert ckpt.latest_step(tmp_path) == 5
+
+
+def test_checkpoint_atomic_torn_commit(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    ckpt.save(tmp_path, 1, tree)
+    # simulate a torn commit: LATEST points at a missing dir
+    (tmp_path / "LATEST").write_text("step_00000099")
+    assert ckpt.latest_step(tmp_path) is None
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_descends_quadratic():
+    opt = adamw(lr=0.1)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for i in range(60):
+        grads = {"w": 2 * params["w"]}          # d/dw ||w||^2
+        updates, state = opt.update(grads, state, params, jnp.int32(i))
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_adafactor_factored_state_shapes():
+    opt = adafactor(lr=0.05)
+    params = {"m": jnp.ones((8, 4)), "v": jnp.ones((5,))}
+    st = opt.init(params)
+    # state is a list aligned with the flattened param order (m, v)
+    assert st["f"][0]["vr"].shape == (8,)
+    assert st["f"][0]["vc"].shape == (4,)
+    assert st["f"][1]["v"].shape == (5,)
+    grads = jax.tree.map(jnp.ones_like, params)
+    updates, st = opt.update(grads, st, params, jnp.int32(0))
+    assert updates["m"].shape == (8, 4)
+    # two steps strictly shrink a quadratic's params
+    p2 = jax.tree.map(lambda p, u: p + u, params, updates)
+    assert float(jnp.abs(p2["m"]).mean()) < 1.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-4
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(lr(jnp.int32(0))) == 0.0
+    assert abs(float(lr(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(lr(jnp.int32(100))) < 0.01
+
+
+# ---------------------------------------------------------------------------
+# train step: microbatching + grad compression
+# ---------------------------------------------------------------------------
+
+def test_microbatch_equals_full_batch():
+    cfg = C.get_arch("qwen2-0.5b").smoke
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    opt = adamw(lr=1e-3, state_dtype="float32")
+    tokens = jax.random.randint(key, (4, 16), 0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": tokens}
+
+    outs = {}
+    for mb in (1, 2):
+        step = make_train_step(cfg, opt, microbatches=mb)
+        p, s, m = step(params, opt.init(params), batch, jnp.int32(0))
+        outs[mb] = (m["loss"], p)
+    np.testing.assert_allclose(float(outs[1][0]), float(outs[2][0]),
+                               rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(outs[1][1]),
+                    jax.tree.leaves(outs[2][1])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-2, atol=2e-3)
+
+
+def test_grad_compression_error_feedback():
+    cfg = C.get_arch("qwen2-0.5b").smoke
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg, key)
+    opt = adamw(lr=1e-3)
+    opt_state = init_opt_state(cfg, opt, params, grad_compression=True)
+    step = make_train_step(cfg, opt, grad_compression=True)
+    tokens = jax.random.randint(key, (2, 16), 0, cfg.vocab_size, jnp.int32)
+    losses = []
+    for i in range(3):
+        params, opt_state, m = step(params, opt_state, {"tokens": tokens},
+                                    jnp.int32(i))
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses))
+    assert losses[-1] < losses[0]
+    # error-feedback residuals stay bounded by one bf16 ulp scale
+    errs = jax.tree.leaves(opt_state["grad_err"])
+    assert all(bool(jnp.isfinite(e).all()) for e in errs)
