@@ -171,14 +171,29 @@ def open_workload_model(s_stats: list, i_stats: list, *,
 
 def concurrent_run(eng, state, ds, *, rounds: int = 12,
                    searches_per_round: int = 22, inserts_per_round: int = 10,
-                   drift: float = 0.3, seed: int = 0):
+                   drift: float = 0.3, seed: int = 0,
+                   parallel_search: bool = False):
     """Interleaved search+insert workload (paper §9.1: 22 search / 10
     insert threads).  Returns dict of throughput/latency/recall metrics.
     Recall of each round's queries is judged against the corpus as of that
-    round (inserted vectors count once they are searchable)."""
+    round (inserted vectors count once they are searchable).
+
+    ``parallel_search=True`` serves each round's query wave through the
+    batch-parallel ``search_many`` fan-out (all 22 searches concurrent
+    against the post-insert snapshot, traces replayed into the shared
+    cache) instead of the serial ``search_batch`` scan; ``search_wall_s``
+    in the result records the host wall-clock either way, so the two
+    modes' engine-side QPS can be compared directly."""
     key = jax.random.PRNGKey(seed)
     s_stats, i_stats, merges = [], [], 0
     recalls = []
+    search_fn = eng.search_many if parallel_search else eng.search_batch
+    search_wall = 0.0
+    n_searches = 0
+    # warm the search jit so round-0 wall time is compile-free
+    qs0 = query_stream(jax.random.fold_in(key, 10_000), ds["cents"],
+                       searches_per_round, noise=ds["noise"])
+    jax.block_until_ready(search_fn(state, qs0)[0])
     for rd in range(rounds):
         kq = jax.random.fold_in(key, 2 * rd)
         ki = jax.random.fold_in(key, 2 * rd + 1)
@@ -195,7 +210,11 @@ def concurrent_run(eng, state, ds, *, rounds: int = 12,
             merges += 1
         qs = query_stream(kq, ds["cents"], searches_per_round,
                           noise=ds["noise"])
-        ids, dists, st_s, state = eng.search_batch(state, qs)
+        t0 = time.time()
+        ids, dists, st_s, state = search_fn(state, qs)
+        jax.block_until_ready(ids)
+        search_wall += time.time() - t0
+        n_searches += searches_per_round
         s_stats.append(st_s)
         truth = brute_force_topk(qs, state.store.vectors,
                                  int(state.store.count), 10)
@@ -220,6 +239,8 @@ def concurrent_run(eng, state, ds, *, rounds: int = 12,
         search_lat_p90_ms=float(np.percentile(lat, 90) * 1e3),
         search_lat_p99_ms=float(np.percentile(lat, 99) * 1e3),
         recall=float(np.mean(recalls)), merges=merges,
+        search_wall_s=search_wall,
+        search_wall_qps=n_searches / max(search_wall, 1e-9),
         state=state,
     )
 
@@ -239,6 +260,51 @@ def search_only_run(eng, state, ds, *, n_queries: int = 200, seed: int = 1):
                                / max(1, np.asarray(stats.cache_hits).sum()
                                      + np.asarray(stats.cache_misses).sum())),
                 state=state)
+
+
+def fanout_compare(eng, state, ds, *, batch: int = 32, repeats: int = 3,
+                   seed: int = 2) -> dict:
+    """Wall-clock QPS of the ``search_many`` fan-out vs the sequential
+    ``search_batch`` scan on the same snapshot, plus a result-identity
+    check.  Both jits are warmed first; best-of-``repeats`` wall times.
+
+    The fan-out's win is engine-side: the scan serialises every query
+    through the cache-state thread while vmap runs the whole wave as one
+    vectorised program — this is the concurrency the paper's search
+    threads exploit, measured here as host throughput."""
+    qs = query_stream(jax.random.PRNGKey(seed), ds["cents"], batch,
+                      noise=ds["noise"])
+    ids_seq, d_seq, *_ = jax.block_until_ready(eng.search_batch(state, qs))
+    ids_par, d_par, *_ = jax.block_until_ready(eng.search_many(state, qs))
+
+    def best_wall(fn):
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.time()
+            jax.block_until_ready(fn(state, qs)[0])
+            best = min(best, time.time() - t0)
+        return best
+
+    seq_s = best_wall(eng.search_batch)
+    par_s = best_wall(eng.search_many)
+    return dict(batch=batch,
+                seq_wall_s=seq_s, par_wall_s=par_s,
+                seq_qps=batch / seq_s, par_qps=batch / par_s,
+                speedup=seq_s / par_s,
+                identical=bool((ids_seq == ids_par).all()) and
+                bool((d_seq == d_par).all()))
+
+
+def write_json(relpath: str, obj) -> str:
+    """Dump ``obj`` under experiments/<relpath> (benchmark JSON output)."""
+    import json
+    import os
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "experiments", relpath)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, sort_keys=True)
+    return path
 
 
 def fmt_row(name: str, **kv) -> str:

@@ -1,5 +1,13 @@
 """Fig 10–12: concurrent search+insert across all systems and datasets —
-insertion throughput, search QPS, mean latency, recall."""
+insertion throughput, search QPS, mean latency, recall.
+
+Also measures the batch-parallel search fan-out: the interleaved workload
+is re-run with each round's query wave served by the vmapped
+``search_many`` (concurrent readers on a shared snapshot, traces replayed
+into one cache) and compared against the sequential ``search_batch``
+scan, engine-side wall-clock QPS on pure search batches included.  All
+rows land in ``experiments/concurrent/fig10.json``.
+"""
 from __future__ import annotations
 
 from benchmarks import common as Cm
@@ -7,18 +15,23 @@ from benchmarks import common as Cm
 
 def run(ds_name: str | None = None, quick: bool = False) -> list[str]:
     rows = []
+    blob: dict = {"systems": {}, "fanout": {}}
     datasets = [ds_name] if ds_name else ["fineweb-like", "deep-like"]
     systems = Cm.SYSTEMS if not quick else ("freshdiskann", "odinann",
                                             "navis")
     for name in datasets:
         base = {}
+        navis_built = None
         for system in systems:
             eng, state, ds = Cm.build_engine(system, name)
+            if system == "navis":
+                navis_built = (eng, state, ds)     # reused by fan-out below
             res = Cm.concurrent_run(eng, state, ds,
                                     rounds=5 if quick else 8)
             res.pop("state")
             rows.append(Cm.fmt_row(f"fig10_{name}_{system}", **res))
             base[system] = res
+            blob["systems"][f"{name}/{system}"] = res
         if "odinann" in base and "navis" in base:
             rows.append(Cm.fmt_row(
                 f"fig10_{name}_navis_vs_odinann",
@@ -36,6 +49,32 @@ def run(ds_name: str | None = None, quick: bool = False) -> list[str]:
                 / max(base["freshdiskann"]["insert_tput"], 1e-9),
                 search_qps_x=base["navis"]["search_qps"]
                 / max(base["freshdiskann"]["search_qps"], 1e-9)))
+
+        # -- batch-parallel fan-out vs sequential scan --------------------
+        eng, state, ds = navis_built or Cm.build_engine("navis", name)
+        par = Cm.concurrent_run(eng, state, ds, rounds=5 if quick else 8,
+                                parallel_search=True)
+        par.pop("state")
+        seq = base.get("navis") or par
+        delta = (par["search_wall_qps"]
+                 / max(seq["search_wall_qps"], 1e-9))
+        rows.append(Cm.fmt_row(
+            f"fig10_{name}_navis_parallel_waves",
+            search_wall_qps=par["search_wall_qps"],
+            seq_search_wall_qps=seq["search_wall_qps"],
+            wall_qps_x=delta, recall=par["recall"]))
+        blob["systems"][f"{name}/navis_parallel"] = par
+
+        fan = {}
+        for batch in ([16] if quick else [16, 32, 64]):
+            cmp_ = Cm.fanout_compare(eng, state, ds, batch=batch,
+                                     repeats=2 if quick else 3)
+            rows.append(Cm.fmt_row(f"fanout_{name}_b{batch}", **cmp_))
+            fan[f"b{batch}"] = cmp_
+        blob["fanout"][name] = fan
+
+    path = Cm.write_json("concurrent/fig10.json", blob)
+    rows.append(f"# wrote {path}")
     return rows
 
 

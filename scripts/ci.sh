@@ -1,0 +1,12 @@
+#!/usr/bin/env sh
+# Tier-1 CI: CPU-only, offline, collection-strict.
+#
+# Fails on the first error *including* module collection errors (a module
+# that fails to import is a hard failure, not a skip) — pytest exits
+# non-zero on collection errors, and --strict-markers turns unknown
+# marks (typo'd @pytest.mark.slow etc.) into errors too.
+set -eu
+cd "$(dirname "$0")/.."
+
+python -m pytest --collect-only -q >/dev/null   # collection gate
+python -m pytest --strict-markers -q "$@"

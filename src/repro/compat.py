@@ -1,0 +1,26 @@
+"""Version compatibility shims for the JAX APIs that moved.
+
+The container pins JAX 0.4.37; newer APIs used by this codebase are
+resolved here so every call site stays on the modern spelling.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """`jax.shard_map` (new) or `jax.experimental.shard_map.shard_map`
+    (0.4.x, where the replication-check kwarg is spelled ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def axis_size(axis_name):
+    """`jax.lax.axis_size` (new) or the classic `psum(1, axis)` spelling."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -10,7 +10,8 @@ from repro.core.engine import (Engine, EngineSpec, EngineState, OpStats,
                                PRESETS, preset)
 from repro.core.graph import (brute_force_topk, build_graph, check_invariants,
                               medoid, recall_at_k, robust_prune)
-from repro.core.iomodel import HBMModel, IOCounters, PAGE_BYTES, SSDModel
+from repro.core.iomodel import (HBMModel, IOCounters, PAGE_BYTES, SSDModel,
+                                merge_counters, sum_counters)
 from repro.core.layout import GraphStore, LayoutSpec, empty_store
 
 __all__ = [
@@ -18,4 +19,5 @@ __all__ = [
     "brute_force_topk", "build_graph", "check_invariants", "medoid",
     "recall_at_k", "robust_prune", "HBMModel", "IOCounters", "PAGE_BYTES",
     "SSDModel", "GraphStore", "LayoutSpec", "empty_store",
+    "merge_counters", "sum_counters",
 ]

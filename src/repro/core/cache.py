@@ -194,6 +194,58 @@ def _single_region_miss(st: CacheState, page) -> CacheState:
 # Public API
 # ---------------------------------------------------------------------------
 
+def lookup(st: CacheState, page: jax.Array) -> jax.Array:
+    """Pure hit test against a *frozen* cache — no mutation, no clock tick.
+
+    This is the read half of :func:`access`, split out so a batch of
+    concurrent searches can probe one shared snapshot under ``vmap``
+    (mutating per-access state does not vectorise; a snapshot lookup
+    does).  The access sequence each search observed is recorded as a
+    trace and folded back in with :func:`apply_trace`.
+    """
+    return (st.status[page] != NOT_CACHED) & (st.policy != POLICIES["none"])
+
+
+def apply_trace(st: CacheState, trace: jax.Array) -> tuple[jax.Array,
+                                                           CacheState]:
+    """Replay a page-access trace (int32 ids, ``-1`` = unused slot) into
+    the cache, returning (replay hit count, new state).
+
+    Concurrent readers share one cache: each runs against the same frozen
+    snapshot, then their traces are replayed in order so the merged state
+    evolves exactly as if the accesses had been issued sequentially — the
+    paper's model of search threads sharing the host cache.  For a single
+    trace replayed onto the snapshot it was recorded against, the result
+    is bit-identical to having threaded :func:`access` through the search.
+    """
+    def step(carry, page):
+        hits, st = carry
+
+        def do(args):
+            hits, st = args
+            hit, st = access(st, page)
+            return hits + hit.astype(jnp.int32), st
+
+        return jax.lax.cond(page >= 0, do, lambda a: a, (hits, st)), None
+
+    (hits, st), _ = jax.lax.scan(step, (jnp.zeros((), jnp.int32), st),
+                                 trace)
+    return hits, st
+
+
+def apply_traces(st: CacheState, traces: jax.Array) -> tuple[jax.Array,
+                                                             CacheState]:
+    """Replay a batch of traces ([Q, T] int32, -1-padded) in query order."""
+    def step(carry, trace):
+        hits, st = carry
+        h, st = apply_trace(st, trace)
+        return (hits + h, st), None
+
+    (hits, st), _ = jax.lax.scan(step, (jnp.zeros((), jnp.int32), st),
+                                 traces)
+    return hits, st
+
+
 def access(st: CacheState, page: jax.Array) -> tuple[jax.Array, CacheState]:
     """One page access.  Returns (hit: bool, new state).
 
@@ -202,7 +254,7 @@ def access(st: CacheState, page: jax.Array) -> tuple[jax.Array, CacheState]:
     """
     st = dataclasses.replace(st, clock=st.clock + 1)
     is_none = st.policy == POLICIES["none"]
-    hit = (st.status[page] != NOT_CACHED) & ~is_none
+    hit = lookup(st, page)
 
     def on_hit(st: CacheState) -> CacheState:
         def navis(st):

@@ -143,6 +143,24 @@ def casr_rerank(store: GraphStore, spec: LayoutSpec, q: jax.Array,
                       counters=counters)
 
 
+def casr_rerank_many(store: GraphStore, spec: LayoutSpec, qs: jax.Array,
+                     pools: jax.Array, counters: IOCounters, *, k: int,
+                     s: int) -> CASRResult:
+    """Batched Algorithm 1: one CASR rerank per query, vectorised.
+
+    The convergence ``while_loop`` carries per-query state only, so the
+    whole batch runs under ``vmap`` (lanes that converge early idle until
+    the slowest lane finishes — the SIMD analogue of the paper's
+    per-thread early exit).  ``counters`` is the per-query starting tally
+    (usually zeros); every CASRResult field gains a leading [Q] axis, so
+    total I/O is ``iomodel.sum_counters(result.counters)``.  This is the
+    rerank stage the engine's ``search_many`` fan-out executes.
+    """
+    return jax.vmap(
+        lambda q, p: casr_rerank(store, spec, q, p, counters, k=k, s=s)
+    )(qs, pools)
+
+
 # ---------------------------------------------------------------------------
 # Classifier + calibration
 # ---------------------------------------------------------------------------

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import axis_size, shard_map
 from repro.core import engine as engine_mod
 from repro.core import pq as pq_mod
 
@@ -97,19 +98,27 @@ def route_inserts(vectors: jax.Array, ids: jax.Array, n_shards_: int,
 # ---------------------------------------------------------------------------
 
 def make_sharded_search(engine: engine_mod.Engine, mesh, *,
-                        n_per: int, n_queries: int):
+                        n_per: int, n_queries: int, parallel: bool = True):
     """Jitted (stacked_state, queries [Q, D]) -> (ids [Q, k], dists [Q, k],
-    stacked_state).  Global ids = shard_index * n_per + local id."""
+    stacked_state).  Global ids = shard_index * n_per + local id.
+
+    ``parallel=True`` (default) runs each shard's query batch through the
+    vmapped ``search_many`` fan-out — the per-shard analogue of the
+    paper's concurrent search threads — instead of the serial
+    state-threading scan; results are identical, the shard just stops
+    serialising its own readers.
+    """
     axes = db_axes(mesh)
     k = engine.spec.k
+    search = engine._search_many if parallel else engine._search_batch
 
     def local(state_stk, queries):
         state = jax.tree.map(lambda x: x[0], state_stk)
-        ids, dists, _, state = engine._search_batch(state, queries)
+        ids, dists, _, state = search(state, queries)
         # globalise ids: flatten the multi-axis shard index
         flat = jnp.zeros((), jnp.int32)
         for ax in axes:
-            flat = flat * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            flat = flat * axis_size(ax) + jax.lax.axis_index(ax)
         gids = jnp.where(ids >= 0, ids + flat * n_per, -1)
         # merge: gather every shard's (dist, id) pool, reduce locally
         all_d = lax.all_gather(jnp.where(ids >= 0, dists, INF),
@@ -126,7 +135,7 @@ def make_sharded_search(engine: engine_mod.Engine, mesh, *,
         return out_i, -neg, jax.tree.map(lambda x: x[None], state)
 
     spec_state = P(axes)
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(spec_state, P()),              # queries replicated
         out_specs=(P(), P(), spec_state),
@@ -155,7 +164,7 @@ def make_sharded_insert(engine: engine_mod.Engine, mesh, *, bucket: int):
         state, _ = lax.scan(step, state, (vecs, ok))
         return jax.tree.map(lambda x: x[None], state)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(P(axes), P(axes), P(axes)),
         out_specs=P(axes),

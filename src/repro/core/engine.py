@@ -33,7 +33,8 @@ from repro.core import graph as graph_mod
 from repro.core import insert as insert_mod
 from repro.core import pq as pq_mod
 from repro.core import search as search_mod
-from repro.core.iomodel import IOCounters, PAGE_BYTES, merge_counters
+from repro.core.iomodel import (IOCounters, PAGE_BYTES, merge_counters,
+                                sum_counters)
 from repro.core.layout import GraphStore, LayoutSpec
 
 INF = jnp.float32(3.4e38)
@@ -160,9 +161,13 @@ class Engine:
         self.spec = spec
         self.codec: Optional[pq_mod.PQCodec] = None
         self._sym: Optional[jax.Array] = None
+        self._jit_ops()
+
+    def _jit_ops(self):
         self.search = jax.jit(self._search)
         self.insert = jax.jit(self._insert)
         self.search_batch = jax.jit(self._search_batch)
+        self.search_many = jax.jit(self._search_many)
         self.insert_batch = jax.jit(self._insert_batch)
         self.merge = jax.jit(self._merge)
 
@@ -281,8 +286,15 @@ class Engine:
 
     # -- search --------------------------------------------------------------
 
-    def _search(self, state: EngineState, q: jax.Array):
-        """Top-k search.  Returns (ids [k], dists [k], stats, state)."""
+    def _search_core(self, state: EngineState, q: jax.Array, *,
+                     frozen: bool):
+        """Shared ②③ body of one search: traverse + rerank + buffer merge.
+
+        ``frozen=False``: the cache threads through (sequential path).
+        ``frozen=True``: the cache is a read-only snapshot and the charged
+        page accesses come back as ``res.trace`` — the vmap-safe fan-out
+        path.  Returns (ids, dists, stats, counters, traverse result).
+        """
         spec = self.spec
         ctr0 = IOCounters.zeros()
         lut = pq_mod.adc_lut(self.codec, q)
@@ -291,8 +303,8 @@ class Engine:
         res = search_mod.disk_traverse(
             state.store, spec.lspec, lut, state.codes, state.cache, ctr0,
             entries, pool_size=spec.e_search, beam_width=spec.beam_width,
-            max_hops=spec.max_hops)
-        cache, ctr = res.cache, res.counters
+            max_hops=spec.max_hops, frozen_cache=frozen)
+        ctr = res.counters
         pool = jnp.where(state.tombstone[jnp.maximum(res.pool_ids, 0)],
                          -1, res.pool_ids)
 
@@ -316,8 +328,14 @@ class Engine:
             ids, dists = self._merge_buffer_hits(state, q, ids, dists)
 
         stats = _delta_stats(ctr0, ctr, rounds)
+        return ids, dists, stats, ctr, res
+
+    def _search(self, state: EngineState, q: jax.Array):
+        """Top-k search.  Returns (ids [k], dists [k], stats, state)."""
+        ids, dists, stats, ctr, res = self._search_core(state, q,
+                                                        frozen=False)
         state = dataclasses.replace(
-            state, cache=cache,
+            state, cache=res.cache,
             ctr_search=merge_counters(state.ctr_search, ctr))
         return ids, dists, stats, state
 
@@ -378,11 +396,17 @@ class Engine:
     def _insert_buffered(self, state: EngineState, v: jax.Array):
         """FreshDiskANN path: append to the host buffer (zero storage I/O);
         the caller triggers :meth:`merge` at the 6% threshold."""
-        slot = state.buf_count
+        # past capacity the insert is dropped outright: the slot write is
+        # clamped AND masked (an unclamped slot would silently scatter-drop
+        # while buf_count kept growing, corrupting the _merge_buffer_hits
+        # validity mask and needs_merge), and the counter saturates.
+        full = state.buf_count >= self.spec.buffer_max
+        slot = jnp.minimum(state.buf_count, self.spec.buffer_max - 1)
         state = dataclasses.replace(
             state,
-            buf_vecs=state.buf_vecs.at[slot].set(v),
-            buf_count=state.buf_count + 1)
+            buf_vecs=state.buf_vecs.at[slot].set(
+                jnp.where(full, state.buf_vecs[slot], v)),
+            buf_count=state.buf_count + jnp.where(full, 0, 1))
         zeros = jnp.zeros((), jnp.int64)
         stats = OpStats(zeros, zeros, zeros, zeros,
                         jnp.zeros((), jnp.int32), zeros, zeros)
@@ -476,6 +500,32 @@ class Engine:
         state, (ids, dists, stats) = lax.scan(step, state, queries)
         return ids, dists, stats, state
 
+    def _search_many(self, state: EngineState, queries: jax.Array):
+        """Batch-parallel search fan-out: the whole batch runs concurrently
+        (vmap) against one shared snapshot of the engine state.
+
+        Searches only *read* the graph, so a snapshot is safe: ids and
+        distances are identical to :meth:`search_batch` (the cache never
+        alters results, only I/O charging).  Each query probes the frozen
+        cache and records its page-access trace; afterwards the traces are
+        replayed in query order into one merged cache and the per-query
+        counters are summed — the paper's model of concurrent readers
+        sharing a single host cache.  Returns (ids [Q,k], dists [Q,k],
+        per-query stats, state).
+        """
+        def one(q):
+            ids, dists, stats, ctr, res = self._search_core(state, q,
+                                                            frozen=True)
+            return ids, dists, stats, ctr, res.trace
+
+        ids, dists, stats, ctrs, traces = jax.vmap(one)(queries)
+        _, cache = cache_mod.apply_traces(state.cache, traces)
+        state = dataclasses.replace(
+            state, cache=cache,
+            ctr_search=merge_counters(state.ctr_search,
+                                      sum_counters(ctrs)))
+        return ids, dists, stats, state
+
     def _insert_batch(self, state: EngineState, vectors: jax.Array):
         def step(state, v):
             stats, state, _ = self._insert(state, v)
@@ -514,9 +564,5 @@ class Engine:
             s_vals[name] = max(s, 1)
         new_spec = spec.with_(**s_vals)
         self.spec = new_spec
-        self.search = jax.jit(self._search)
-        self.insert = jax.jit(self._insert)
-        self.search_batch = jax.jit(self._search_batch)
-        self.insert_batch = jax.jit(self._insert_batch)
-        self.merge = jax.jit(self._merge)
+        self._jit_ops()
         return new_spec

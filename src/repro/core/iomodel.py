@@ -61,6 +61,13 @@ def merge_counters(a: IOCounters, b: IOCounters) -> IOCounters:
     return jax.tree.map(lambda x, y: x + y, a, b)
 
 
+def sum_counters(batched: IOCounters) -> IOCounters:
+    """Reduce per-query counters ([Q]-leading leaves, e.g. from a vmapped
+    search fan-out) to one scalar tally.  Concurrent readers charge I/O
+    independently; the device serves the union, so counts simply add."""
+    return jax.tree.map(lambda x: x.sum(axis=0), batched)
+
+
 @dataclasses.dataclass(frozen=True)
 class SSDModel:
     """NVMe cost model (defaults ≈ the paper's Crucial T705 PCIe 5.0).

@@ -70,8 +70,8 @@ def entrance_search(ent: EntranceGraph, lut: jax.Array, codes: jax.Array,
                           main_ids, 0)]), INF)
         all_idx = jnp.concatenate([pool_idx, jnp.where(valid, nbrs, -1)])
         all_d = jnp.concatenate([pool_d, d])
-        order = jnp.argsort(all_d)[:pool_size]
-        return (all_idx[order], all_d[order], expanded, hops + 1)
+        neg_d, order = lax.top_k(-all_d, pool_size)
+        return (all_idx[order], -neg_d, expanded, hops + 1)
 
     pool_idx, pool_d, expanded, hops = lax.while_loop(
         cond, body, (pool_idx, pool_d, expanded,
@@ -92,11 +92,15 @@ class TraverseResult(NamedTuple):
     cache: cache_mod.CacheState
     counters: IOCounters
     page_seen: jax.Array      # [P_max] bool — pages this traversal read
+    # frozen-cache mode only (else None): charged page accesses, in order
+    trace: jax.Array | None = None       # [max_hops * W] int32, -1 padded
+    trace_n: jax.Array | None = None     # int32 — valid trace entries
 
 
 def _charge_page_read(counters: IOCounters, spec: LayoutSpec, *,
-                      is_edge_page: jax.Array) -> IOCounters:
-    """Account one 4 KiB page read from the slow tier."""
+                      is_edge_page: jax.Array, n=1) -> IOCounters:
+    """Account ``n`` 4 KiB page reads from the slow tier (n may be traced:
+    the frozen fan-out path charges a whole beam's misses at once)."""
     if spec.kind == "packed":
         per = spec.packed_per_page
         payload = per * spec.packed_record_bytes
@@ -105,22 +109,39 @@ def _charge_page_read(counters: IOCounters, spec: LayoutSpec, *,
         # vectors counted provisionally as wasted; reranking reclassifies
         return dataclasses.replace(
             counters,
-            read_requests=counters.read_requests + 1,
-            edge_bytes_read=counters.edge_bytes_read + edge,
-            wasted_vec_bytes_read=counters.wasted_vec_bytes_read + vec,
-            pad_bytes_read=counters.pad_bytes_read + PAGE_BYTES - payload)
+            read_requests=counters.read_requests + n,
+            edge_bytes_read=counters.edge_bytes_read + n * edge,
+            wasted_vec_bytes_read=counters.wasted_vec_bytes_read + n * vec,
+            pad_bytes_read=counters.pad_bytes_read +
+            n * (PAGE_BYTES - payload))
     per = spec.edgelists_per_page
     payload = per * spec.edgelist_bytes
     return dataclasses.replace(
         counters,
-        read_requests=counters.read_requests + 1,
-        edge_bytes_read=counters.edge_bytes_read + payload,
-        pad_bytes_read=counters.pad_bytes_read + PAGE_BYTES - payload)
+        read_requests=counters.read_requests + n,
+        edge_bytes_read=counters.edge_bytes_read + n * payload,
+        pad_bytes_read=counters.pad_bytes_read +
+        n * (PAGE_BYTES - payload))
+
+
+def _charge_access(counters: IOCounters, spec: LayoutSpec,
+                   hit: jax.Array) -> IOCounters:
+    """Account one cache probe: tally hit/miss, charge a page read on miss."""
+    counters = dataclasses.replace(
+        counters,
+        cache_hits=counters.cache_hits + hit,
+        cache_misses=counters.cache_misses + (~hit))
+    return lax.cond(
+        hit, lambda c: c,
+        lambda c: _charge_page_read(c, spec, is_edge_page=True),
+        counters)
 
 
 def fetch_edgelists(store: GraphStore, spec: LayoutSpec,
                     cache: cache_mod.CacheState, counters: IOCounters,
-                    page_seen: jax.Array, ids: jax.Array, valid: jax.Array):
+                    page_seen: jax.Array, ids: jax.Array, valid: jax.Array,
+                    trace: jax.Array | None = None,
+                    trace_n: jax.Array | None = None):
     """Read the edge pages backing ``ids`` (beam of W vertices) through the
     per-query buffer (``page_seen``) and the host cache.  Pages already read
     by *this* traversal are free (the query holds them in its scratch
@@ -129,44 +150,71 @@ def fetch_edgelists(store: GraphStore, spec: LayoutSpec,
     co-traversed vertices ride on one read.  Packed layout: the page also
     carries the vertices' vectors (marked loaded by the caller).
 
-    Returns (edges [W,R], cache, counters, page_seen).
+    With ``trace``/``trace_n`` supplied the cache is treated as a *frozen
+    snapshot*: hits come from :func:`cache_mod.lookup` (pure), the cache is
+    returned untouched, and every charged access is appended to ``trace``
+    for later :func:`cache_mod.apply_trace` replay.  This is the read path
+    concurrent (vmapped) searches share.
+
+    Returns (edges [W,R], cache, counters, page_seen, trace, trace_n).
     """
+    frozen = trace is not None
     w = ids.shape[0]
     safe = jnp.maximum(ids, 0)
     pages = store.edge_page[safe]
 
-    def step(carry, i):
-        cache, counters, page_seen = carry
-        page = pages[i]
-        # free if: invalid, duplicate within this beam, or already read by
-        # this traversal (per-query buffer)
-        earlier = jnp.arange(w) < i
-        dup = jnp.any((pages == page) & valid & earlier)
-        dup = dup | ~valid[i] | page_seen[jnp.maximum(page, 0)]
+    if frozen:
+        # No mutation ordering constraint against a snapshot, so the whole
+        # beam is processed vectorised (the sequential path must scan: each
+        # access's eviction depends on the previous one).  The trace keeps
+        # slot order, so replay still matches the sequential access order.
+        safe_p = jnp.maximum(pages, 0)
+        # charged if: valid, not already read by this traversal, and not a
+        # duplicate of an earlier valid slot in this beam
+        eq_earlier = (pages[:, None] == pages[None, :]) & valid[None, :] & \
+            (jnp.arange(w)[None, :] < jnp.arange(w)[:, None])
+        charged = valid & ~page_seen[safe_p] & ~eq_earlier.any(axis=1)
+        hit = cache_mod.lookup(cache, safe_p) & charged
+        n_hit = hit.sum()
+        n_miss = charged.sum() - n_hit
+        counters = dataclasses.replace(
+            counters,
+            cache_hits=counters.cache_hits + n_hit,
+            cache_misses=counters.cache_misses + n_miss)
+        counters = _charge_page_read(counters, spec, is_edge_page=True,
+                                     n=n_miss)
+        # scatter charged pages at trace_n.. in slot order (OOB = dropped)
+        pos = jnp.where(charged, trace_n + jnp.cumsum(charged) - 1,
+                        trace.shape[0])
+        trace = trace.at[pos].set(pages)
+        trace_n = trace_n + charged.sum().astype(jnp.int32)
+        page_seen = page_seen.at[jnp.where(valid, safe_p,
+                                           page_seen.shape[0])].set(True)
+    else:
+        def step(carry, i):
+            cache_c, counters, page_seen = carry
+            page = pages[i]
+            # free if: invalid, duplicate within this beam, or already read
+            # by this traversal (per-query buffer)
+            earlier = jnp.arange(w) < i
+            dup = jnp.any((pages == page) & valid & earlier)
+            dup = dup | ~valid[i] | page_seen[jnp.maximum(page, 0)]
 
-        def charged(args):
-            cache, counters = args
-            hit, cache = cache_mod.access(cache, page)
-            counters = dataclasses.replace(
-                counters,
-                cache_hits=counters.cache_hits + hit,
-                cache_misses=counters.cache_misses + (~hit))
-            counters = lax.cond(
-                hit, lambda c: c,
-                lambda c: _charge_page_read(c, spec, is_edge_page=True),
-                counters)
-            return cache, counters
+            def charged(args):
+                cache_c, counters = args
+                hit, cache_c = cache_mod.access(cache_c, page)
+                return cache_c, _charge_access(counters, spec, hit)
 
-        cache, counters = lax.cond(dup, lambda a: a, charged,
-                                   (cache, counters))
-        page_seen = page_seen.at[jnp.maximum(page, 0)].set(
-            page_seen[jnp.maximum(page, 0)] | valid[i])
-        return (cache, counters, page_seen), None
+            cache_c, counters = lax.cond(dup, lambda a: a, charged,
+                                         (cache_c, counters))
+            page_seen = page_seen.at[jnp.maximum(page, 0)].set(
+                page_seen[jnp.maximum(page, 0)] | valid[i])
+            return (cache_c, counters, page_seen), None
 
-    (cache, counters, page_seen), _ = lax.scan(
-        step, (cache, counters, page_seen), jnp.arange(w))
+        (cache, counters, page_seen), _ = lax.scan(
+            step, (cache, counters, page_seen), jnp.arange(w))
     edges = jnp.where(valid[:, None], store.edges[safe], -1)
-    return edges, cache, counters, page_seen
+    return edges, cache, counters, page_seen, trace, trace_n
 
 
 def disk_traverse(store: GraphStore, spec: LayoutSpec, lut: jax.Array,
@@ -174,7 +222,8 @@ def disk_traverse(store: GraphStore, spec: LayoutSpec, lut: jax.Array,
                   counters: IOCounters, entry_ids: jax.Array, *,
                   pool_size: int, beam_width: int = 4,
                   max_hops: int = 512,
-                  page_seen: jax.Array | None = None) -> TraverseResult:
+                  page_seen: jax.Array | None = None,
+                  frozen_cache: bool = False) -> TraverseResult:
     """Greedy beam search over the on-disk graph with PQ distances.
 
     ``entry_ids``: [n_entry] main-graph ids (-1 padded) from ① entry-point
@@ -182,10 +231,15 @@ def disk_traverse(store: GraphStore, spec: LayoutSpec, lut: jax.Array,
     the top ``pool_size``.  ``page_seen`` optionally seeds the per-query
     page buffer (bulk merges share one buffer across many seeks so repeated
     page reads amortise — FreshDiskANN's batched-I/O advantage).
+
+    ``frozen_cache=True`` runs the traversal as a pure *reader* of the
+    cache snapshot: no cache mutation threads through the loop (so a batch
+    of traversals vectorises under ``vmap``), and the charged page-access
+    sequence comes back in ``result.trace`` / ``result.trace_n`` for
+    ordered replay into the shared cache afterwards.
     """
     n_max = store.n_max
     n_entry = entry_ids.shape[0]
-    pad = pool_size + beam_width * store.r
 
     safe_e = jnp.maximum(entry_ids, 0)
     e_valid = entry_ids >= 0
@@ -201,26 +255,40 @@ def disk_traverse(store: GraphStore, spec: LayoutSpec, lut: jax.Array,
     vec_loaded = jnp.zeros((n_max,), bool)
     if page_seen is None:
         page_seen = jnp.zeros_like(store.page_live, dtype=bool)
+    if frozen_cache:
+        # each hop charges ≤ beam_width accesses, so this never overflows
+        trace0 = jnp.full((max_hops * beam_width,), -1, jnp.int32)
+        trace_n0 = jnp.zeros((), jnp.int32)
+    else:
+        trace0, trace_n0 = None, None
 
     def cond(carry):
-        pool_ids, pool_d, expanded, vec_loaded, page_seen, cache, \
-            counters, hops = carry
+        pool_ids, hops = carry[0], carry[-1]
+        expanded = carry[2]
         frontier = (pool_ids >= 0) & ~expanded[jnp.maximum(pool_ids, 0)]
         return (hops < max_hops) & frontier.any()
 
     def body(carry):
-        pool_ids, pool_d, expanded, vec_loaded, page_seen, cache, \
-            counters, hops = carry
+        if frozen_cache:
+            (pool_ids, pool_d, expanded, vec_loaded, page_seen,
+             trace, trace_n, counters, hops) = carry
+            cache_in = cache                  # closed-over snapshot
+        else:
+            (pool_ids, pool_d, expanded, vec_loaded, page_seen,
+             cache_in, counters, hops) = carry
+            trace, trace_n = None, None
         unexp = (pool_ids >= 0) & ~expanded[jnp.maximum(pool_ids, 0)]
         cand_d = jnp.where(unexp, pool_d, INF)
-        sel = jnp.argsort(cand_d)[:beam_width]
-        beam = jnp.where(cand_d[sel] < INF, pool_ids[sel], -1)
+        # top_k (stable, like argsort) is O(n) selection, not a full sort
+        neg_sel, sel = lax.top_k(-cand_d, beam_width)
+        beam = jnp.where(-neg_sel < INF, pool_ids[sel], -1)
         beam_valid = beam >= 0
         expanded = expanded.at[jnp.maximum(beam, 0)].set(
             expanded[jnp.maximum(beam, 0)] | beam_valid)
 
-        edges, cache, counters, page_seen = fetch_edgelists(
-            store, spec, cache, counters, page_seen, beam, beam_valid)
+        edges, cache_out, counters, page_seen, trace, trace_n = \
+            fetch_edgelists(store, spec, cache_in, counters, page_seen,
+                            beam, beam_valid, trace, trace_n)
         if spec.kind == "packed":
             vec_loaded = vec_loaded.at[jnp.maximum(beam, 0)].set(
                 vec_loaded[jnp.maximum(beam, 0)] | beam_valid)
@@ -233,23 +301,37 @@ def disk_traverse(store: GraphStore, spec: LayoutSpec, lut: jax.Array,
         safe_n = jnp.maximum(nbrs, 0)
         in_pool = (nbrs[:, None] == pool_ids[None, :]).any(axis=1)
         nvalid = (nbrs >= 0) & ~expanded[safe_n] & ~in_pool
-        # dedupe within the flat neighbor list (first occurrence wins)
-        idx_of = jnp.full((n_max,), jnp.iinfo(jnp.int32).max, jnp.int32)
-        idx_of = idx_of.at[safe_n].min(
-            jnp.where(nvalid, jnp.arange(nbrs.shape[0], dtype=jnp.int32),
-                      jnp.iinfo(jnp.int32).max))
-        nvalid = nvalid & (idx_of[safe_n] ==
-                           jnp.arange(nbrs.shape[0], dtype=jnp.int32))
+        # dedupe within the flat neighbor list (first occurrence wins):
+        # sort the W*R keys instead of scattering through an O(n_max)
+        # position table — the stable sort keeps the lowest flat index
+        # first among equal keys, so the same occurrence survives
+        key_ = jnp.where(nvalid, nbrs, jnp.iinfo(jnp.int32).max)
+        sort_idx = jnp.argsort(key_)
+        sorted_key = key_[sort_idx]
+        first = jnp.concatenate([
+            jnp.ones((1,), bool), sorted_key[1:] != sorted_key[:-1]])
+        keep = jnp.zeros_like(nvalid).at[sort_idx].set(first)
+        nvalid = nvalid & keep
         nd = jnp.where(nvalid, pq_mod.adc_distance(lut, codes[safe_n]), INF)
 
         all_ids = jnp.concatenate([pool_ids, jnp.where(nvalid, nbrs, -1)])
         all_d = jnp.concatenate([pool_d, nd])
-        order = jnp.argsort(all_d)[:pool_size]
-        pool_ids, pool_d = all_ids[order], all_d[order]
+        neg_d, order = lax.top_k(-all_d, pool_size)
+        pool_ids, pool_d = all_ids[order], -neg_d
         counters = dataclasses.replace(counters, hops=counters.hops + 1)
+        if frozen_cache:
+            return (pool_ids, pool_d, expanded, vec_loaded, page_seen,
+                    trace, trace_n, counters, hops + 1)
         return (pool_ids, pool_d, expanded, vec_loaded, page_seen,
-                cache, counters, hops + 1)
+                cache_out, counters, hops + 1)
 
+    if frozen_cache:
+        carry = (pool_ids, pool_d, expanded, vec_loaded, page_seen,
+                 trace0, trace_n0, counters, jnp.zeros((), jnp.int32))
+        (pool_ids, pool_d, expanded, vec_loaded, page_seen, trace,
+         trace_n, counters, hops) = lax.while_loop(cond, body, carry)
+        return TraverseResult(pool_ids, pool_d, vec_loaded, hops, cache,
+                              counters, page_seen, trace, trace_n)
     carry = (pool_ids, pool_d, expanded, vec_loaded, page_seen,
              cache, counters, jnp.zeros((), jnp.int32))
     pool_ids, pool_d, expanded, vec_loaded, page_seen, cache, \

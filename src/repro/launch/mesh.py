@@ -14,19 +14,29 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models.layers import ShardingRules
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _axis_type_kwargs(n: int) -> dict:
+    # jax.sharding.AxisType (and make_mesh's axis_types=) only exist on
+    # newer JAX; on 0.4.x every axis is Auto anyway, so omit the kwarg.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
+def make_mesh(shape, axes):
+    """`jax.make_mesh` with explicit-Auto axes where the API supports it."""
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_smoke_mesh():
     """1×1 mesh with the production axis names, for single-host tests."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def batch_axes(mesh) -> tuple[str, ...]:

@@ -1,0 +1,101 @@
+"""Offline fallback for ``hypothesis``: seeded-parametrize property tests.
+
+This container has no network, so ``pip install hypothesis`` is not an
+option.  The test modules do::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _prop import given, settings, st
+
+and get a miniature, deterministic stand-in: ``given`` draws
+``max_examples`` example tuples from the strategies with a PRNG seeded on
+the test name and expands them through ``pytest.mark.parametrize``.  No
+shrinking, no adaptive search — just reproducible randomized coverage, so
+the suite collects and runs everywhere.  When real hypothesis is
+installed it wins.
+
+Only the strategy surface this repo uses is implemented
+(``sampled_from``, ``integers``, ``floats``, ``booleans``).
+"""
+from __future__ import annotations
+
+import functools
+import random
+import zlib
+
+import pytest
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw, label):
+        self._draw = draw
+        self._label = label
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+    def __repr__(self):
+        return f"st.{self._label}"
+
+
+class _Strategies:
+    @staticmethod
+    def sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))],
+                         f"sampled_from({seq!r})")
+
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 31 - 1):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value),
+                         f"floats({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5, "booleans()")
+
+
+st = _Strategies()
+
+
+def _materialize(fn, strats, n):
+    """Expand ``fn`` into a parametrized test with ``n`` seeded draws."""
+    names = list(strats)                      # keyword order = declared order
+    rng = random.Random(zlib.crc32(fn.__name__.encode()))
+    rows = [tuple(strats[k].example(rng) for k in names) for _ in range(n)]
+
+    @functools.wraps(fn)
+    def run(*args, **kwargs):
+        return fn(*args, **kwargs)
+
+    run._prop_fn = fn
+    run._prop_strats = strats
+    return pytest.mark.parametrize(",".join(names), rows)(run)
+
+
+def given(**strats):
+    def deco(fn):
+        # honour a settings() applied *below* given (hypothesis allows
+        # either stacking order)
+        n = getattr(fn, "_prop_max_examples", DEFAULT_MAX_EXAMPLES)
+        return _materialize(fn, strats, n)
+    return deco
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    """Either stacking order works: above ``given`` re-draws with the
+    requested count; below it, the count is stashed for given to pick up."""
+    def deco(fn):
+        if hasattr(fn, "_prop_strats"):
+            return _materialize(fn._prop_fn, fn._prop_strats, max_examples)
+        fn._prop_max_examples = max_examples
+        return fn
+    return deco

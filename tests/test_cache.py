@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline container: seeded shim
+    from _prop import given, settings, st
 
 from repro.core import cache as C
 

@@ -33,8 +33,8 @@ _SCRIPT = textwrap.dedent("""
                   e_pos=40, pq_m=16, cache_capacity_pages=64, max_hops=48,
                   buffer_max=32, ent_frac=0.10)
     eng = Engine(spec)
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4, 2), ("data", "model"))
     sstate = dist.build_sharded_state(eng, jax.random.PRNGKey(2), vecs, 8)
     fn = dist.make_sharded_search(eng, mesh, n_per=N // 8, n_queries=16)
     with mesh:
@@ -61,9 +61,9 @@ _MOE_SCRIPT = textwrap.dedent("""
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.models import layers as L
+    from repro.launch.mesh import make_mesh
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((4, 2), ("data", "model"))
     B, S, D, E, F, K = 8, 4, 16, 8, 32, 2
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (B, S, D), jnp.float32)

@@ -3,7 +3,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                       # offline container: seeded shim
+    from _prop import given, settings, st
 
 from repro.kernels import ops, ref
 from repro.kernels.pq_adc import adc_distance_pallas
