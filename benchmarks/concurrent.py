@@ -1,14 +1,24 @@
 """Fig 10–12: concurrent search+insert across all systems and datasets —
 insertion throughput, search QPS, mean latency, recall.
 
-Also measures the batch-parallel search fan-out: the interleaved workload
-is re-run with each round's query wave served by the vmapped
-``search_many`` (concurrent readers on a shared snapshot, traces replayed
-into one cache) and compared against the sequential ``search_batch``
-scan, engine-side wall-clock QPS on pure search batches included.  All
-rows land in ``experiments/concurrent/fig10.json``.
+Also measures the batch-parallel fan-outs: the interleaved workload is
+re-run with each round's query wave served by the vmapped ``search_many``
+(concurrent readers on a shared snapshot, traces replayed into one cache)
+and compared against the sequential ``search_batch`` scan — rows in
+``experiments/concurrent/fig10.json`` — and the *mixed* driver
+interleaves ``insert_many`` waves (two-phase concurrent updates) with
+``search_many`` waves across insert ratios, sweeping the fan-out vs the
+sequential scans: insert QPS, search QPS and latency per ratio, plus the
+insert-wave scaling (fan-out vs sequential wall QPS per batch size) and a
+512-insert wave recall-parity check land in
+``experiments/concurrent/fig11.json``.
+
+``python -m benchmarks.concurrent --smoke`` runs the mixed driver alone
+on a CI-scale corpus (the collection-gated smoke step of scripts/ci.sh).
 """
 from __future__ import annotations
+
+import sys
 
 from benchmarks import common as Cm
 
@@ -75,9 +85,108 @@ def run(ds_name: str | None = None, quick: bool = False) -> list[str]:
 
     path = Cm.write_json("concurrent/fig10.json", blob)
     rows.append(f"# wrote {path}")
+    rows += run_fig11(ds_name, quick=quick)
+    return rows
+
+
+def run_fig11(ds_name: str | None = None, quick: bool = False,
+              smoke: bool = False) -> list[str]:
+    """Mixed search+insert fan-out driver (insert_many × search_many).
+
+    Three sections land in ``experiments/concurrent/fig11.json``:
+
+    * ``insert_scaling`` — wall-clock insert QPS, ``insert_many`` fan-out
+      vs sequential ``insert_batch``, per wave size (expected ≥1× from
+      batch 8 up: the whole wave position-seeks as one vectorised program
+      while only the structural commits serialise).
+    * ``mixed`` — the interleaved workload at several insert ratios,
+      fan-out waves vs sequential scans: modelled insert/search QPS and
+      search latency, wall-clock QPS of both phases, recall.
+    * ``wave512`` — a ≥512-insert wave: the fan-out graph's held-out
+      recall must sit within one point of the sequential graph's (full
+      runs only — tests/test_insert_many.py covers it at CI scale).
+    """
+    rows: list[str] = []
+    blob: dict = {"insert_scaling": {}, "mixed": {}, "wave512": {}}
+    if smoke:
+        datasets = ["smoke"]
+        batches, ratios, rounds, repeats = [8, 16], (0.25, 0.75), 2, 2
+    else:
+        datasets = [ds_name] if ds_name else ["deep-like"]
+        batches = [8, 16] if quick else [8, 16, 32, 64]
+        ratios = (0.25, 0.75) if quick else (0.2, 0.5, 0.8)
+        rounds, repeats = (3, 2) if quick else (6, 3)
+
+    for name in datasets:
+        eng, state, ds = Cm.build_engine("navis", name)
+
+        for batch in batches:
+            cmp_ = Cm.insert_wave_compare(eng, state, ds, batch=batch,
+                                          repeats=repeats)
+            rows.append(Cm.fmt_row(f"fig11_{name}_insert_b{batch}", **cmp_))
+            blob["insert_scaling"][f"{name}/b{batch}"] = cmp_
+
+        ops = 32
+        for ratio in ratios:
+            n_ins = max(int(round(ops * ratio)), 1)
+            n_srch = max(ops - n_ins, 1)
+            kw = dict(rounds=rounds, searches_per_round=n_srch,
+                      inserts_per_round=n_ins)
+            par = Cm.concurrent_run(eng, state, ds, parallel_search=True,
+                                    parallel_insert=True, **kw)
+            par.pop("state")
+            seq = Cm.concurrent_run(eng, state, ds, **kw)
+            seq.pop("state")
+            entry = {"fanout": par, "sequential": seq,
+                     "insert_ratio": ratio}
+            blob["mixed"][f"{name}/r{ratio}"] = entry
+            rows.append(Cm.fmt_row(
+                f"fig11_{name}_mixed_r{ratio}",
+                insert_tput=par["insert_tput"],
+                search_qps=par["search_qps"],
+                search_lat_mean_ms=par["search_lat_mean_ms"],
+                insert_wall_x=par["insert_wall_qps"]
+                / max(seq["insert_wall_qps"], 1e-9),
+                search_wall_x=par["search_wall_qps"]
+                / max(seq["search_wall_qps"], 1e-9),
+                recall=par["recall"], seq_recall=seq["recall"]))
+
+        if not (quick or smoke):
+            import jax
+            import numpy as np
+            from repro.data import insert_stream, query_stream
+            from repro.core import brute_force_topk, recall_at_k
+            wave = insert_stream(jax.random.PRNGKey(11), ds["cents"], 512,
+                                 noise=ds["noise"], drift=0.2)
+            _, st_m = eng.insert_many(state, wave)
+            _, st_s = eng.insert_batch(state, wave)
+            qs = query_stream(jax.random.PRNGKey(12), ds["cents"], 100,
+                              noise=ds["noise"])
+            truth = brute_force_topk(qs, st_s.store.vectors,
+                                     int(st_s.store.count), 10)
+
+            def probe(st):
+                ids, _, _, _ = eng.search_batch(st, qs)
+                return float(recall_at_k(ids, truth))
+
+            entry = dict(wave=512, recall_fanout=probe(st_m),
+                         recall_seq=probe(st_s),
+                         count_equal=bool(int(st_m.store.count) ==
+                                          int(st_s.store.count)))
+            blob["wave512"][name] = entry
+            rows.append(Cm.fmt_row(f"fig11_{name}_wave512", **entry))
+
+    path = Cm.write_json("concurrent/fig11.json", blob)
+    rows.append(f"# wrote {path}")
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    if "--smoke" in sys.argv:
+        out = run_fig11(smoke=True)
+    elif "--quick" in sys.argv:
+        out = run(quick=True)
+    else:
+        out = run()
+    for r in out:
         print(r)

@@ -22,9 +22,19 @@ def main():
               f"{res['recall']:8.3f}"
               + (f"   ({res['merges']} merge windows)"
                  if res["merges"] else ""))
+    # the same mixed workload served by the batch-parallel fan-outs:
+    # insert_many waves (snapshot seek -> serialized commit) + search_many
+    eng, state, ds = Cm.build_engine("navis", "fineweb-like")
+    res = Cm.concurrent_run(eng, state, ds, rounds=6, drift=0.3,
+                            parallel_search=True, parallel_insert=True)
+    print(f"{'navis (fan-out)':14s} {res['insert_tput']:9.0f} "
+          f"{res['search_qps']:11.0f} "
+          f"{res['search_lat_mean_ms']:8.2f}ms "
+          f"{res['recall']:8.3f}")
     print("\nwall-times from the SSD cost model (Crucial T705) over exact "
           "per-op I/O counters;\nsee benchmarks/concurrent.py for the full "
-          "6-system × 2-dataset sweep.")
+          "6-system × 2-dataset sweep\nand the insert fan-out scaling "
+          "(experiments/concurrent/fig11.json).")
 
 
 if __name__ == "__main__":

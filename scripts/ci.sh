@@ -5,8 +5,17 @@
 # that fails to import is a hard failure, not a skip) — pytest exits
 # non-zero on collection errors, and --strict-markers turns unknown
 # marks (typo'd @pytest.mark.slow etc.) into errors too.
+#
+# Tier-1 collects every tests/test_*.py, including the fan-out suites
+# (tests/test_search_many.py, tests/test_insert_many.py).  After the
+# suite, the collection-gated smoke step drives the mixed
+# search+insert fan-out benchmark end-to-end at CI scale (writes
+# experiments/concurrent/fig11.json).
 set -eu
 cd "$(dirname "$0")/.."
 
 python -m pytest --collect-only -q >/dev/null   # collection gate
 python -m pytest --strict-markers -q "$@"
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.concurrent --smoke

@@ -198,18 +198,23 @@ def lookup(st: CacheState, page: jax.Array) -> jax.Array:
     """Pure hit test against a *frozen* cache — no mutation, no clock tick.
 
     This is the read half of :func:`access`, split out so a batch of
-    concurrent searches can probe one shared snapshot under ``vmap``
-    (mutating per-access state does not vectorise; a snapshot lookup
-    does).  The access sequence each search observed is recorded as a
-    trace and folded back in with :func:`apply_trace`.
+    concurrent readers — search queries or an insert wave's position
+    seeks — can probe one shared snapshot under ``vmap`` (mutating
+    per-access state does not vectorise; a snapshot lookup does).  The
+    access sequence each reader observed is recorded as a trace and
+    folded back in with :func:`apply_trace`.
     """
     return (st.status[page] != NOT_CACHED) & (st.policy != POLICIES["none"])
 
 
 def apply_trace(st: CacheState, trace: jax.Array) -> tuple[jax.Array,
                                                            CacheState]:
-    """Replay a page-access trace (int32 ids, ``-1`` = unused slot) into
-    the cache, returning (replay hit count, new state).
+    """Replay a page-access trace into the cache, returning (replay hit
+    count, new state).  The valid entries are a contiguous prefix — the
+    traversal appends charged accesses in order — so replay runs a
+    dynamic-length loop that stops at the first ``-1``: cost scales with
+    the accesses actually charged, not with the (heavily padded)
+    ``max_hops × beam_width`` trace capacity.
 
     Concurrent readers share one cache: each runs against the same frozen
     snapshot, then their traces are replayed in order so the merged state
@@ -218,24 +223,33 @@ def apply_trace(st: CacheState, trace: jax.Array) -> tuple[jax.Array,
     trace replayed onto the snapshot it was recorded against, the result
     is bit-identical to having threaded :func:`access` through the search.
     """
-    def step(carry, page):
-        hits, st = carry
+    t = trace.shape[0]
 
-        def do(args):
-            hits, st = args
-            hit, st = access(st, page)
-            return hits + hit.astype(jnp.int32), st
+    def cond(carry):
+        i, _, _ = carry
+        return (i < t) & (trace[jnp.minimum(i, t - 1)] >= 0)
 
-        return jax.lax.cond(page >= 0, do, lambda a: a, (hits, st)), None
+    def body(carry):
+        i, hits, st = carry
+        hit, st = access(st, trace[i])
+        return i + 1, hits + hit.astype(jnp.int32), st
 
-    (hits, st), _ = jax.lax.scan(step, (jnp.zeros((), jnp.int32), st),
-                                 trace)
+    _, hits, st = jax.lax.while_loop(
+        cond, body, (jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+                     st))
     return hits, st
 
 
 def apply_traces(st: CacheState, traces: jax.Array) -> tuple[jax.Array,
                                                              CacheState]:
-    """Replay a batch of traces ([Q, T] int32, -1-padded) in query order."""
+    """Replay a batch of traces ([Q, T] int32, -1-padded) in wave order.
+
+    Both fan-out paths use this merge: ``search_many`` replays its query
+    wave's traces, ``insert_many`` its position-seek traces (before the
+    commit scan, whose out-of-place updates may then invalidate pages —
+    all wave reads precede all wave writes in the two-phase model).
+    Padding lanes replay nothing: set their rows to all ``-1``.
+    """
     def step(carry, trace):
         hits, st = carry
         h, st = apply_trace(st, trace)

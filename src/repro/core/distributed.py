@@ -12,10 +12,12 @@ per-shard top-k merge; inserts route to their owning shard by id hash).
   ``all_gather`` of the per-shard (k dists, k ids) pools — k·(4+4) bytes
   per shard per query, tiny next to the per-shard traversal.
 * ``sharded_insert``: the host router buckets new vectors by
-  ``hash(id) % n_shards``; every shard scans its bucket (padded to the
-  same length — shape-static SPMD) and applies in-place inserts to its
-  local state.  No cross-shard edges: the shards are independent graphs,
-  which is how multi-segment deployments (Starling, Qdrant) scale writes.
+  ``hash(id) % n_shards``; every shard runs its bucket (padded to the
+  same length — shape-static SPMD) through the ``insert_many`` fan-out:
+  concurrent position seeks on the shard snapshot, serialized
+  conflict-aware commits.  No cross-shard edges: the shards are
+  independent graphs, which is how multi-segment deployments (Starling,
+  Qdrant) scale writes.
 
 ``dryrun()`` lowers + compiles both ops on the production meshes with
 ShapeDtypeStructs (no allocation) — the GVS counterpart of
@@ -143,14 +145,28 @@ def make_sharded_search(engine: engine_mod.Engine, mesh, *,
     return jax.jit(fn)
 
 
-def make_sharded_insert(engine: engine_mod.Engine, mesh, *, bucket: int):
+def make_sharded_insert(engine: engine_mod.Engine, mesh, *, bucket: int,
+                        parallel: bool = True):
     """Jitted (stacked_state, routed [S, bucket, D], valid [S, bucket]) ->
-    stacked_state.  Each shard inserts only its own bucket."""
+    stacked_state.  Each shard inserts only its own bucket.
+
+    ``parallel=True`` (default) routes the bucket through the shard-local
+    ``insert_many`` fan-out — every shard position-seeks its whole bucket
+    concurrently against its own snapshot and serialises only the
+    conflict-aware commits, the write-side analogue of the parallel
+    sharded search.  Padding lanes ride the ``valid`` mask.  Buffered
+    engines fall back to the sequential scan (no seek to parallelise).
+    """
     axes = db_axes(mesh)
+    fan_out = parallel and engine.spec.update_path != "buffered"
 
     def local(state_stk, routed, valid):
         state = jax.tree.map(lambda x: x[0], state_stk)
         vecs, ok = routed[0], valid[0]
+
+        if fan_out:
+            _, state = engine._insert_many(state, vecs, valid=ok)
+            return jax.tree.map(lambda x: x[None], state)
 
         def step(state, xs):
             v, keep = xs

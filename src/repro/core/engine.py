@@ -14,7 +14,12 @@ navis              decoupled  casr    dynamic   navis           inplace
 
 All per-op functions are jitted pure functions over :class:`EngineState`;
 batches run under ``lax.scan`` so the cache/entrance/counter state threads
-exactly as a concurrent run would interleave it.
+exactly as a concurrent run would interleave it.  The batch-parallel
+fan-outs (``search_many``, ``insert_many``) instead run their whole wave
+against one frozen snapshot — searches end to end, inserts for the
+position-seek phase — and fold the wave's page-access traces back into
+the shared cache; ``insert_many`` then serialises only the conflict-aware
+structural commits.
 """
 from __future__ import annotations
 
@@ -135,10 +140,13 @@ class OpStats(NamedTuple):
     serial_rounds: jax.Array      # dependent I/O rounds (hops + rerank)
     cache_hits: jax.Array
     cache_misses: jax.Array
+    dropped: jax.Array = jnp.zeros((), bool)   # insert rejected (capacity)
 
 
 def _delta_stats(before: IOCounters, after: IOCounters,
-                 rounds) -> OpStats:
+                 rounds, dropped=None) -> OpStats:
+    if dropped is None:
+        dropped = jnp.zeros((), bool)
     return OpStats(
         read_requests=after.read_requests - before.read_requests,
         read_bytes=after.total_read_bytes() - before.total_read_bytes(),
@@ -146,7 +154,8 @@ def _delta_stats(before: IOCounters, after: IOCounters,
         write_bytes=after.total_write_bytes() - before.total_write_bytes(),
         serial_rounds=rounds,
         cache_hits=after.cache_hits - before.cache_hits,
-        cache_misses=after.cache_misses - before.cache_misses)
+        cache_misses=after.cache_misses - before.cache_misses,
+        dropped=dropped)
 
 
 # ---------------------------------------------------------------------------
@@ -169,6 +178,7 @@ class Engine:
         self.search_batch = jax.jit(self._search_batch)
         self.search_many = jax.jit(self._search_many)
         self.insert_batch = jax.jit(self._insert_batch)
+        self.insert_many = jax.jit(self._insert_many)
         self.merge = jax.jit(self._merge)
 
     # -- construction -------------------------------------------------------
@@ -362,36 +372,55 @@ class Engine:
     def _insert_inplace(self, state: EngineState, v: jax.Array,
                         page_seen=None, charge_bulk: bool = False):
         spec = self.spec
-        ctr0 = IOCounters.zeros()
-        lut = pq_mod.adc_lut(self.codec, v)
-        entries, e_ent = self._entries(state, lut)
 
-        new_code = pq_mod.encode(self.codec, v[None])[0]
-        codes = state.codes.at[state.store.count].set(new_code)
+        # capacity guard: past n_max the whole insertion is masked and the
+        # stats carry ``dropped`` — an unguarded insert would silently lose
+        # the scatter writes (codes.at[count], vectors.at[new_id]) while
+        # count kept incrementing, corrupting main_to_ent and live_count.
+        full = state.store.count >= state.store.n_max
 
-        ires = insert_mod.insert_vertex(
-            state.store, spec.lspec, self.codec, codes, self._sym,
-            state.cache, ctr0, v, entries, e_pos=spec.e_pos, k=spec.k,
-            s=spec.s_pos, rerank=spec.rerank, beam_width=spec.beam_width,
-            max_hops=spec.max_hops, tombstone=state.tombstone,
-            page_seen=page_seen)
-        ctr = ires.counters
-        if spec.rerank == "full":
-            ctr = self._reclassify(ctr, v, ires.pool_ids, ires.store,
-                                   (ires.pool_ids >= 0).sum())
+        def do(state: EngineState):
+            ctr0 = IOCounters.zeros()
+            lut = pq_mod.adc_lut(self.codec, v)
+            entries, e_ent = self._entries(state, lut)
 
-        ent = state.ent
-        if spec.entrance == "dynamic":
-            ent = ent_mod.navis_update(
-                ent, ires.new_id, new_code, ires.pool_ids, e_ent,
-                ires.store.count, codes, self._sym,
-                r_ent_frac=spec.ent_frac)
+            new_code = pq_mod.encode(self.codec, v[None])[0]
+            codes = state.codes.at[state.store.count].set(new_code)
 
-        stats = _delta_stats(ctr0, ctr, ires.hops + ires.rerank_rounds)
-        state = dataclasses.replace(
-            state, store=ires.store, codes=codes, ent=ent, cache=ires.cache,
-            ctr_insert=merge_counters(state.ctr_insert, ctr))
-        return stats, state, ires.page_seen
+            ires = insert_mod.insert_vertex(
+                state.store, spec.lspec, self.codec, codes, self._sym,
+                state.cache, ctr0, v, entries, e_pos=spec.e_pos, k=spec.k,
+                s=spec.s_pos, rerank=spec.rerank,
+                beam_width=spec.beam_width, max_hops=spec.max_hops,
+                tombstone=state.tombstone, page_seen=page_seen)
+            ctr = ires.counters
+            if spec.rerank == "full":
+                ctr = self._reclassify(ctr, v, ires.pool_ids, ires.store,
+                                       (ires.pool_ids >= 0).sum())
+
+            ent = state.ent
+            if spec.entrance == "dynamic":
+                ent = ent_mod.navis_update(
+                    ent, ires.new_id, new_code, ires.pool_ids, e_ent,
+                    ires.store.count, codes, self._sym,
+                    r_ent_frac=spec.ent_frac)
+
+            stats = _delta_stats(ctr0, ctr, ires.hops + ires.rerank_rounds)
+            state = dataclasses.replace(
+                state, store=ires.store, codes=codes, ent=ent,
+                cache=ires.cache,
+                ctr_insert=merge_counters(state.ctr_insert, ctr))
+            return stats, state, ires.page_seen
+
+        def skip(state: EngineState):
+            stats = _delta_stats(IOCounters.zeros(), IOCounters.zeros(),
+                                 jnp.zeros((), jnp.int32),
+                                 dropped=jnp.ones((), bool))
+            seen = (page_seen if page_seen is not None else
+                    jnp.zeros_like(state.store.page_live, dtype=bool))
+            return stats, state, seen
+
+        return lax.cond(full, skip, do, state)
 
     def _insert_buffered(self, state: EngineState, v: jax.Array):
         """FreshDiskANN path: append to the host buffer (zero storage I/O);
@@ -409,7 +438,8 @@ class Engine:
             buf_count=state.buf_count + jnp.where(full, 0, 1))
         zeros = jnp.zeros((), jnp.int64)
         stats = OpStats(zeros, zeros, zeros, zeros,
-                        jnp.zeros((), jnp.int32), zeros, zeros)
+                        jnp.zeros((), jnp.int32), zeros, zeros,
+                        dropped=full)
         return stats, state, jnp.zeros_like(state.store.page_live,
                                             dtype=bool)
 
@@ -471,23 +501,36 @@ class Engine:
     def delete(self, state: EngineState, vid: jax.Array) -> EngineState:
         """Tombstone ``vid``: removed from results and future wiring; the
         entrance graph drops its member.  Bulk compaction happens at the
-        merge threshold (not modelled — deletion is benign per OdinANN)."""
+        merge threshold (not modelled — deletion is benign per OdinANN).
+
+        Idempotent: deleting an already-tombstoned id is a no-op (a second
+        n_deleted increment would drift live_count negative-ward and
+        misfire the buffered-merge threshold).  Dropping an entrance
+        member also scrubs every reciprocal edge pointing at its slot —
+        otherwise ``entrance_search`` could seed traversals from the dead
+        vertex through the dangling references.
+        """
+        already = state.tombstone[vid]
         ent = state.ent
         eslot = ent.main_to_ent[vid]
 
         def drop_ent(ent):
+            slot = jnp.maximum(eslot, 0)
+            # the dead slot keeps its own outgoing edges (they point at
+            # live members and let a traversal route *through* the hole),
+            # but no live row may point back at it
+            edges = jnp.where(ent.edges == eslot, -1, ent.edges)
             return dataclasses.replace(
                 ent,
-                ids=ent.ids.at[jnp.maximum(eslot, 0)].set(
-                    jnp.where(eslot >= 0, -1, ent.ids[jnp.maximum(eslot,
-                                                                  0)])),
+                ids=ent.ids.at[slot].set(-1),
+                edges=edges,
                 main_to_ent=ent.main_to_ent.at[vid].set(-1))
 
-        ent = lax.cond(eslot >= 0, drop_ent, lambda e: e, ent)
+        ent = lax.cond((eslot >= 0) & ~already, drop_ent, lambda e: e, ent)
         return dataclasses.replace(
             state, ent=ent,
             tombstone=state.tombstone.at[vid].set(True),
-            n_deleted=state.n_deleted + 1)
+            n_deleted=state.n_deleted + jnp.where(already, 0, 1))
 
     # -- batches --------------------------------------------------------------
 
@@ -532,6 +575,146 @@ class Engine:
             return state, stats
 
         state, stats = lax.scan(step, state, vectors)
+        return stats, state
+
+    def _insert_many(self, state: EngineState, vectors: jax.Array,
+                     valid: jax.Array | None = None):
+        """Batch-parallel insert fan-out: the whole insert wave position-
+        seeks concurrently, only the tiny structural commits serialise.
+
+        Phase ① vmaps :func:`insert.position_seek` (traversal + CASR/full
+        rerank + neighbor selection) against one frozen snapshot of the
+        engine state — the read-heavy part that dominates update cost runs
+        for all ``B`` inserts at once, each charging its own I/O counters
+        and recording its page-access trace against the cache snapshot.
+        The traces are then replayed in wave order into one merged cache,
+        mirroring ``search_many``.
+
+        Phase ② commits the structural updates serially under ``lax.scan``
+        with conflict-aware re-validation: each commit re-checks its
+        snapshot-selected neighbors against edgelists already mutated by
+        earlier commits in the same wave (re-pruning by symmetric-PQ
+        distance, dropping tombstoned/duplicate picks) and charges an RMW
+        re-read for every neighbor edge page a prior commit dirtied — the
+        snapshot copy in its staging buffer is stale — so counters stay
+        honest versus the sequential path.  Commits past capacity are
+        masked and flagged ``dropped``.
+
+        ``valid`` masks padding lanes (sharded insert buckets): an invalid
+        lane charges no I/O, replays no trace and commits nothing.
+        Returns (per-insert OpStats [B], state).
+        """
+        spec = self.spec
+        B = vectors.shape[0]
+        ok = jnp.ones((B,), bool) if valid is None else valid
+
+        if spec.update_path == "buffered":
+            # nothing to fan out: buffered inserts do no position seeking
+            def step(state, xs):
+                v, keep = xs
+
+                def do(state):
+                    stats, state, _ = self._insert_buffered(state, v)
+                    return stats, state
+
+                def skip(state):
+                    z = jnp.zeros((), jnp.int64)
+                    return OpStats(z, z, z, z, jnp.zeros((), jnp.int32),
+                                   z, z, jnp.zeros((), bool)), state
+
+                stats, state = lax.cond(keep, do, skip, state)
+                return state, stats
+
+            state, stats = lax.scan(step, state, (vectors, ok))
+            return stats, state
+
+        # -- phase ①: concurrent position seek on the frozen snapshot -----
+        new_codes = pq_mod.encode(self.codec, vectors)          # [B, M]
+
+        def seek_one(v):
+            ctr0 = IOCounters.zeros()
+            lut = pq_mod.adc_lut(self.codec, v)
+            entries, e_ent = self._entries(state, lut)
+            seek = insert_mod.position_seek(
+                state.store, spec.lspec, self.codec, state.codes,
+                state.cache, ctr0, v, entries, e_pos=spec.e_pos,
+                k=spec.k, s=spec.s_pos, rerank=spec.rerank,
+                beam_width=spec.beam_width, max_hops=spec.max_hops,
+                tombstone=state.tombstone, frozen_cache=True)
+            ctr = seek.counters
+            if spec.rerank == "full":
+                ctr = self._reclassify(ctr, v, seek.pool_ids, state.store,
+                                       (seek.pool_ids >= 0).sum())
+            return (seek.nbrs, seek.pool_ids, ctr, seek.hops,
+                    seek.rerank_rounds, seek.trace, e_ent)
+
+        nbrs_all, pools, ctrs, hops, rounds, traces, e_ents = \
+            jax.vmap(seek_one)(vectors)
+
+        # padding lanes charge nothing and replay nothing
+        ctrs = jax.tree.map(lambda x: jnp.where(ok, x, jnp.zeros_like(x)),
+                            ctrs)
+        hops = jnp.where(ok, hops, 0)
+        rounds = jnp.where(ok, rounds, 0)
+        traces = jnp.where(ok[:, None], traces, -1)
+
+        # the wave's reads merge into the shared cache in wave order
+        _, cache = cache_mod.apply_traces(state.cache, traces)
+
+        # -- phase ②: serialized conflict-aware commits -------------------
+        n_max = state.store.n_max
+        dirty0 = jnp.zeros_like(state.store.page_live, dtype=bool)
+
+        def commit(carry, xs):
+            store, codes, ent, cache, dirty = carry
+            v, nbrs, code, pool, e_ent, keep = xs
+            can = keep & (store.count < n_max)
+
+            def do(args):
+                store, codes, ent, cache, dirty = args
+                new_id = store.count.astype(jnp.int32)
+                codes = codes.at[new_id].set(code)
+                nbrs2 = insert_mod.revalidate_neighbors(
+                    nbrs, new_id, code, codes, self._sym, state.tombstone)
+                ctr, _ = insert_mod.charge_rmw_rereads(
+                    IOCounters.zeros(), spec.lspec, store, nbrs2, dirty)
+                sres = insert_mod.commit_insert(
+                    store, spec.lspec, cache, ctr, v, nbrs2, codes,
+                    self._sym)
+                dirty = insert_mod.mark_dirty_pages(
+                    dirty, sres.store, new_id, nbrs2, sres.modified)
+                if spec.entrance == "dynamic":
+                    ent = ent_mod.navis_update(
+                        ent, new_id, code, pool, e_ent, sres.store.count,
+                        codes, self._sym, r_ent_frac=spec.ent_frac)
+                return ((sres.store, codes, ent, sres.cache, dirty),
+                        sres.counters)
+
+            def skip(args):
+                return args, IOCounters.zeros()
+
+            carry, ctr = lax.cond(can, do, skip,
+                                  (store, codes, ent, cache, dirty))
+            return carry, (ctr, keep & ~can)
+
+        (store, codes, ent, cache, _), (commit_ctrs, dropped) = lax.scan(
+            commit, (state.store, state.codes, state.ent, cache, dirty0),
+            (vectors, nbrs_all, new_codes, pools, e_ents, ok))
+
+        per = merge_counters(ctrs, commit_ctrs)            # [B]-leading
+        stats = OpStats(
+            read_requests=per.read_requests,
+            read_bytes=per.total_read_bytes(),
+            write_requests=per.write_requests,
+            write_bytes=per.total_write_bytes(),
+            serial_rounds=hops + rounds,
+            cache_hits=per.cache_hits,
+            cache_misses=per.cache_misses,
+            dropped=dropped)
+        state = dataclasses.replace(
+            state, store=store, codes=codes, ent=ent, cache=cache,
+            ctr_insert=merge_counters(state.ctr_insert,
+                                      sum_counters(per)))
         return stats, state
 
     # -- calibration (paper §5.2 warm-up) -------------------------------------

@@ -115,6 +115,10 @@ def navis_update(ent: EntranceGraph, new_id: jax.Array, new_code: jax.Array,
     e_pos : [P] on-disk explored set from position seeking (PQ-sorted).
     e_ent : [E] entrance-graph explored set from entry-point selection.
     Triggered only while |G_ent| < r_ent_frac * |G| and capacity remains.
+
+    ``new_code`` is the new vertex's PQ code: reciprocal pruning measures
+    every candidate edge against it directly, so the update never gathers
+    ``codes[new_id]`` (insert waves commit with the code in hand).
     """
     r_ent = ent.r_ent
     want = (ent.count.astype(jnp.float32)
@@ -167,8 +171,8 @@ def navis_update(ent: EntranceGraph, new_id: jax.Array, new_code: jax.Array,
                     occupied,
                     pq_mod.sym_distance(sym_tables, p_code, row_codes), -INF)
                 worst = jnp.argmax(d_row)
-                d_q = pq_mod.sym_distance(
-                    sym_tables, p_code, codes[new_id][None])[0]
+                d_q = pq_mod.sym_distance(sym_tables, p_code,
+                                          new_code[None])[0]
                 # if free slot: take it; else replace worst iff q is closer
                 tgt = jnp.where(has_free, free, worst)
                 write = has_free | (d_q < d_row[worst])

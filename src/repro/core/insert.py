@@ -20,7 +20,16 @@ write costs:
 RMW reads are free here: the wired neighbors come from the converged
 explored pool, so their edge pages were read during this very insert's
 traversal and still sit in the insert's RMW staging buffer (§8.2) — the
-paper charges the same way.
+paper charges the same way.  The one exception is a *wave* commit
+(``Engine.insert_many``): its staging buffer holds the pre-wave snapshot,
+so pages dirtied by earlier commits in the same wave are stale and the
+re-read is charged (:func:`charge_rmw_rereads`).
+
+The module is split so the engine can overlap the read-heavy phase across
+an update wave: :func:`position_seek` (pure, vmap-safe, frozen-cache
+capable) produces the neighbor pool; :func:`commit_insert` /
+:func:`structural_update` applies it; :func:`insert_vertex` is the
+sequential composition of the two.
 """
 from __future__ import annotations
 
@@ -74,6 +83,7 @@ class StructuralResult(NamedTuple):
     cache: cache_mod.CacheState
     counters: IOCounters
     n_wired: jax.Array      # reciprocal edges actually added
+    modified: jax.Array     # [r] bool — which nbr edgelists were rewritten
 
 
 def _wire_reciprocal(store: GraphStore, nbrs: jax.Array, new_id: jax.Array,
@@ -193,7 +203,7 @@ def structural_update(store: GraphStore, spec: LayoutSpec,
                                     next_page=store.next_page + 1)
         counters = _charge_writes(counters, spec, n_modified,
                                   jnp.int32(0))
-        return StructuralResult(store, cache, counters, n_modified)
+        return StructuralResult(store, cache, counters, n_modified, modified)
 
     # decoupled: gather new + modified edgelists onto fresh pages
     moved_ids = jnp.concatenate([jnp.array([new_id], jnp.int32),
@@ -214,12 +224,152 @@ def structural_update(store: GraphStore, spec: LayoutSpec,
                         lambda c: c, cache), None
 
     cache, _ = lax.scan(hint, cache, jnp.arange(moved_ids.shape[0]))
-    return StructuralResult(store, cache, counters, n_modified)
+    return StructuralResult(store, cache, counters, n_modified, modified)
+
+
+# ---------------------------------------------------------------------------
+# Conflict-aware wave commits (batch-parallel insert fan-out)
+# ---------------------------------------------------------------------------
+#
+# ``insert_many`` runs position seeking for a whole insert wave against one
+# frozen snapshot of the engine state (phase ①, vmapped), then commits the
+# structural updates serially (phase ②, lax.scan).  A commit late in the
+# wave sees a graph already mutated by the earlier commits, so its
+# snapshot-derived neighbor picks must be re-validated, and any neighbor
+# edge page dirtied by a prior commit must be re-read before the RMW —
+# the snapshot copy its own traversal read is stale.  These two helpers
+# are that conflict handling; both are pure and scan-friendly.
+
+def revalidate_neighbors(nbrs: jax.Array, new_id: jax.Array,
+                         new_code: jax.Array, codes: jax.Array,
+                         sym_tables: jax.Array,
+                         tombstone: jax.Array) -> jax.Array:
+    """Re-check a snapshot-selected neighbor list [r] at commit time.
+
+    Drops self-references, duplicates and now-tombstoned picks, then
+    re-prunes the survivors by symmetric-PQ distance to the new vertex
+    — measured against ``new_code``, which the wave commit holds in hand
+    (codes live in host memory — re-validation costs no storage I/O).
+    Returns [r] ids, -1 padded at the tail.
+    """
+    r = nbrs.shape[0]
+    safe = jnp.maximum(nbrs, 0)
+    arange = jnp.arange(r)
+    dup = ((nbrs[:, None] == nbrs[None, :]) & (nbrs[None, :] >= 0) &
+           (arange[None, :] < arange[:, None])).any(axis=1)
+    valid = (nbrs >= 0) & (nbrs != new_id) & ~tombstone[safe] & ~dup
+    d = pq_mod.sym_distance(sym_tables, new_code, codes[safe])
+    order = jnp.argsort(jnp.where(valid, d, INF))
+    return jnp.where(valid[order], nbrs[order], -1)
+
+
+def charge_rmw_rereads(counters: IOCounters, spec: LayoutSpec,
+                       store: GraphStore, nbrs: jax.Array,
+                       dirty_pages: jax.Array
+                       ) -> tuple[IOCounters, jax.Array]:
+    """Charge the RMW re-reads a wave commit owes for conflicting pages.
+
+    The sequential insert path gets RMW reads for free: the wired
+    neighbors come from the converged explored pool, so their edge pages
+    sit in the insert's own staging buffer.  In a wave, that buffer holds
+    the *snapshot* version — if a prior commit in the same wave dirtied a
+    neighbor's current edge page, the commit must re-read it, one page
+    read per distinct dirty page.  Returns (counters, n_reread).
+    """
+    r = nbrs.shape[0]
+    valid = nbrs >= 0
+    pages = jnp.where(valid, store.edge_page[jnp.maximum(nbrs, 0)], -1)
+    arange = jnp.arange(r)
+    dup = ((pages[:, None] == pages[None, :]) & (pages[None, :] >= 0) &
+           (arange[None, :] < arange[:, None])).any(axis=1)
+    hit = valid & (pages >= 0) & dirty_pages[jnp.maximum(pages, 0)] & ~dup
+    n = hit.sum()
+    counters = search_mod._charge_page_read(counters, spec,
+                                            is_edge_page=True, n=n)
+    return counters, n
+
+
+def mark_dirty_pages(dirty_pages: jax.Array, store: GraphStore,
+                     new_id: jax.Array, nbrs: jax.Array,
+                     modified: jax.Array) -> jax.Array:
+    """Record the pages a commit wrote (post-commit ``store``): the new
+    vertex's page and every rewritten/relocated neighbor edgelist's
+    current page.  Later commits in the wave consult this map to charge
+    their RMW re-reads."""
+    touched = jnp.concatenate([new_id[None].astype(jnp.int32),
+                               jnp.where(modified, nbrs, -1)])
+    pages = store.edge_page[jnp.maximum(touched, 0)]
+    idx = jnp.where((touched >= 0) & (pages >= 0), pages,
+                    dirty_pages.shape[0])                 # OOB = dropped
+    return dirty_pages.at[idx].set(True)
 
 
 # ---------------------------------------------------------------------------
 # Full insertion (position seek + rerank + wire)
 # ---------------------------------------------------------------------------
+
+class SeekResult(NamedTuple):
+    """Phase-① output: everything a structural commit needs, plus the
+    traversal's I/O evidence (trace / page_seen) for cache replay."""
+    nbrs: jax.Array           # [R] selected neighbors (-1 padded)
+    pool_ids: jax.Array       # E_pos (PQ-sorted, tombstone-masked)
+    hops: jax.Array
+    rerank_rounds: jax.Array
+    cache: cache_mod.CacheState   # threaded (sequential) / snapshot (frozen)
+    counters: IOCounters
+    page_seen: jax.Array      # pages this seek's traversal touched
+    trace: jax.Array | None = None    # frozen mode: charged page accesses
+    trace_n: jax.Array | None = None
+
+
+def position_seek(store: GraphStore, spec: LayoutSpec, codec: pq_mod.PQCodec,
+                  codes: jax.Array, cache: cache_mod.CacheState,
+                  counters: IOCounters, new_vec: jax.Array,
+                  entry_ids: jax.Array, *, e_pos: int, k: int, s: int,
+                  rerank: str = "casr", beam_width: int = 4,
+                  max_hops: int = 512, tombstone: jax.Array | None = None,
+                  page_seen: jax.Array | None = None,
+                  frozen_cache: bool = False) -> SeekResult:
+    """① Position seeking: traverse + rerank + neighbor selection, no
+    structural mutation.  Pure in the engine state, so a whole insert wave
+    runs concurrently under ``vmap`` with ``frozen_cache=True`` (each seek
+    probes the cache snapshot and records its page-access trace, exactly
+    like the search fan-out)."""
+    lut = pq_mod.adc_lut(codec, new_vec)
+    res = search_mod.disk_traverse(
+        store, spec, lut, codes, cache, counters, entry_ids,
+        pool_size=e_pos, beam_width=beam_width, max_hops=max_hops,
+        page_seen=page_seen, frozen_cache=frozen_cache)
+    counters = res.counters
+    cache = res.cache
+    pool_ids = res.pool_ids
+    if tombstone is not None:
+        pool_ids = jnp.where(tombstone[jnp.maximum(pool_ids, 0)], -1,
+                             pool_ids)
+
+    if rerank == "casr":
+        cres = casr_mod.casr_rerank(store, spec, new_vec, pool_ids,
+                                    counters, k=k, s=s)
+        counters = cres.counters
+        nbrs = select_neighbors(pool_ids, cres, store.r)
+        rounds = cres.rerank_rounds
+    else:
+        ids, _, _, counters = search_mod.full_rerank(
+            store, spec, new_vec, res._replace(pool_ids=pool_ids),
+            counters, k=pool_ids.shape[0])
+        nbrs = full_pool_neighbors(ids, store.r)
+        rounds = jnp.int32(1)
+
+    return SeekResult(nbrs=nbrs, pool_ids=pool_ids, hops=res.hops,
+                      rerank_rounds=rounds, cache=cache, counters=counters,
+                      page_seen=res.page_seen, trace=res.trace,
+                      trace_n=res.trace_n)
+
+
+# ② The structural commit for a precomputed neighbor pool is
+# :func:`structural_update`; wave commits re-validate first.
+commit_insert = structural_update
+
 
 class InsertResult(NamedTuple):
     store: GraphStore
@@ -247,33 +397,15 @@ def insert_vertex(store: GraphStore, spec: LayoutSpec, codec: pq_mod.PQCodec,
     ``tombstone`` masks deleted vertices out of neighbor selection;
     ``page_seen`` seeds the traversal's page buffer (bulk merges).
     """
-    lut = pq_mod.adc_lut(codec, new_vec)
-    res = search_mod.disk_traverse(
-        store, spec, lut, codes, cache, counters, entry_ids,
-        pool_size=e_pos, beam_width=beam_width, max_hops=max_hops,
-        page_seen=page_seen)
-    counters = res.counters
-    cache = res.cache
-    if tombstone is not None:
-        res = res._replace(pool_ids=jnp.where(
-            tombstone[jnp.maximum(res.pool_ids, 0)], -1, res.pool_ids))
-
-    if rerank == "casr":
-        cres = casr_mod.casr_rerank(store, spec, new_vec, res.pool_ids,
-                                    counters, k=k, s=s)
-        counters = cres.counters
-        nbrs = select_neighbors(res.pool_ids, cres, store.r)
-        rounds = cres.rerank_rounds
-    else:
-        ids, _, _, counters = search_mod.full_rerank(
-            store, spec, new_vec, res, counters, k=res.pool_ids.shape[0])
-        nbrs = full_pool_neighbors(ids, store.r)
-        rounds = jnp.int32(1)
-
-    sres = structural_update(store, spec, cache, counters, new_vec, nbrs,
-                             codes, sym_tables)
+    seek = position_seek(
+        store, spec, codec, codes, cache, counters, new_vec, entry_ids,
+        e_pos=e_pos, k=k, s=s, rerank=rerank, beam_width=beam_width,
+        max_hops=max_hops, tombstone=tombstone, page_seen=page_seen)
+    sres = commit_insert(store, spec, seek.cache, seek.counters, new_vec,
+                         seek.nbrs, codes, sym_tables)
     return InsertResult(store=sres.store, cache=sres.cache,
                         counters=sres.counters,
                         new_id=sres.store.count - 1,
-                        pool_ids=res.pool_ids, hops=res.hops,
-                        rerank_rounds=rounds, page_seen=res.page_seen)
+                        pool_ids=seek.pool_ids, hops=seek.hops,
+                        rerank_rounds=seek.rerank_rounds,
+                        page_seen=seek.page_seen)

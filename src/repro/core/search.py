@@ -236,7 +236,9 @@ def disk_traverse(store: GraphStore, spec: LayoutSpec, lut: jax.Array,
     cache snapshot: no cache mutation threads through the loop (so a batch
     of traversals vectorises under ``vmap``), and the charged page-access
     sequence comes back in ``result.trace`` / ``result.trace_n`` for
-    ordered replay into the shared cache afterwards.
+    ordered replay into the shared cache afterwards.  Both fan-outs ride
+    on this: ``search_many`` (|E_search| pools) and ``insert_many``'s
+    position-seek phase (|E_pos| pools via :func:`insert.position_seek`).
     """
     n_max = store.n_max
     n_entry = entry_ids.shape[0]
