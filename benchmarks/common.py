@@ -55,7 +55,11 @@ _STATES: dict = {}
 
 def dataset(name: str):
     d = DATASETS[name]
-    key = jax.random.PRNGKey(hash(name) % 2 ** 31)
+    # zlib.crc32, not hash(): str hashing is salted per process, which made
+    # every benchmark invocation generate a *different* corpus (numbers in
+    # experiments/*.json were irreproducible run to run)
+    import zlib
+    key = jax.random.PRNGKey(zlib.crc32(name.encode()) % 2 ** 31)
     vecs, assign, cents = make_clustered(
         key, d["n"], d["dim"], n_clusters=d["n_clusters"], noise=d["noise"])
     queries = query_stream(jax.random.fold_in(key, 1), cents, 200,

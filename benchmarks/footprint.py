@@ -1,13 +1,24 @@
-"""Fig 16: peak host-memory and storage usage per system.
+"""Fig 16: peak host-memory and storage usage per system — plus the
+per-query traversal-state scaling curve.
 
 Host memory = PQ codes + entrance graph + indirection table + cache
 capacity + (FreshDiskANN) insertion buffer.  Storage = live pages × 4 KiB
-(+ FreshDiskANN's double buffer during merge)."""
+(+ FreshDiskANN's double buffer during merge).
+
+``--state-scaling`` (also :func:`state_scaling`) reports the bytes of
+per-query traversal state each ``disk_traverse`` lane carries, hashed
+visited sets vs the dense bitmap reference, across corpus sizes — the
+hashed curve must be FLAT (state bounded by ``max_hops × beam_width``,
+not ``n_max``), which is what lets ``search_many`` / ``insert_many``
+waves scale past the corpus size.  Pure shape math (no engine builds);
+writes ``experiments/footprint/state_scaling.json`` and exits non-zero
+if the hashed curve is not flat."""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks import common as Cm
+from repro.core import search as search_mod
 from repro.core.iomodel import PAGE_BYTES
 
 
@@ -42,6 +53,40 @@ def run(ds_name: str = "fineweb-like", quick: bool = False) -> list[str]:
     return rows
 
 
+def state_scaling(sizes=(10_000, 100_000, 1_000_000, 10_000_000), *,
+                  pool_size: int = 100, beam_width: int = 4,
+                  max_hops: int = 256, batch: int = 512) -> list[str]:
+    """Per-query traversal state bytes vs corpus size (hash vs bitmap)."""
+    rows = []
+    blob = {"params": dict(pool_size=pool_size, beam_width=beam_width,
+                           max_hops=max_hops, batch=batch),
+            "sizes": list(sizes), "hash_bytes": [], "bitmap_bytes": [],
+            "hash_wave_mib": [], "bitmap_wave_mib": []}
+    for n_max in sizes:
+        kw = dict(n_max=n_max, p_max=2 * n_max, pool_size=pool_size,
+                  beam_width=beam_width, max_hops=max_hops, frozen=True)
+        h = search_mod.traversal_state_bytes(visited="hash", **kw)
+        b = search_mod.traversal_state_bytes(visited="bitmap", **kw)
+        blob["hash_bytes"].append(h)
+        blob["bitmap_bytes"].append(b)
+        blob["hash_wave_mib"].append(batch * h / 2 ** 20)
+        blob["bitmap_wave_mib"].append(batch * b / 2 ** 20)
+        rows.append(Cm.fmt_row(f"state_n{n_max}", hash_B=h, bitmap_B=b,
+                               hash_wave_MiB=batch * h / 2 ** 20,
+                               bitmap_wave_MiB=batch * b / 2 ** 20))
+    flat = len(set(blob["hash_bytes"])) == 1
+    blob["hash_flat_in_n_max"] = flat
+    path = Cm.write_json("footprint/state_scaling.json", blob)
+    rows.append(f"# wrote {path}")
+    if not flat:
+        raise SystemExit(
+            f"hashed traversal state is NOT flat in n_max: "
+            f"{blob['hash_bytes']}")
+    return rows
+
+
 if __name__ == "__main__":
-    for r in run():
+    import sys
+    out = state_scaling() if "--state-scaling" in sys.argv else run()
+    for r in out:
         print(r)

@@ -1,0 +1,108 @@
+"""Kernel dispatch parity smoke: ref oracles vs Pallas interpret mode.
+
+Off-TPU the engine's hot loops run the ``ref.py`` jnp oracles; the Pallas
+programs (what a real TPU executes as Mosaic) are validated against those
+oracles here via the interpreter, over a small shape sweep per kernel.
+Also asserts the dispatch contract: off-TPU the default mode is ``ref``
+and ``NAVIS_KERNEL_INTERPRET=1`` flips it to ``interpret`` — no off-TPU
+code path may run the (orders-of-magnitude slower) interpreter unless the
+flag is set.
+
+Writes ``experiments/kernels/parity.json``; exits non-zero on any
+mismatch.  Wired into ``scripts/ci.sh``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as Cm
+from repro.kernels import ops, ref
+from repro.kernels.pq_adc import adc_distance_pallas
+from repro.kernels.rerank_l2 import rerank_l2_pallas
+from repro.kernels.topk_pool import pool_merge_pallas
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _check_dispatch() -> dict:
+    """The mode contract (trace-time env read)."""
+    on_tpu = jax.default_backend() == "tpu"
+    saved = os.environ.pop("NAVIS_KERNEL_INTERPRET", None)
+    try:
+        default_mode = ops.kernel_mode()
+        os.environ["NAVIS_KERNEL_INTERPRET"] = "1"
+        flagged_mode = ops.kernel_mode()
+    finally:
+        os.environ.pop("NAVIS_KERNEL_INTERPRET", None)
+        if saved is not None:
+            os.environ["NAVIS_KERNEL_INTERPRET"] = saved
+    # explicit raises, not asserts: this is a CI gate and must survive -O
+    if on_tpu:
+        if not (default_mode == flagged_mode == "mosaic"):
+            raise SystemExit(f"TPU dispatch broken: {default_mode}/"
+                             f"{flagged_mode}")
+    elif default_mode != "ref":
+        raise SystemExit(f"off-TPU default mode must be 'ref', got "
+                         f"{default_mode!r} — the engine would run the "
+                         f"Pallas interpreter on every hop")
+    elif flagged_mode != "interpret":
+        raise SystemExit(f"NAVIS_KERNEL_INTERPRET=1 must select "
+                         f"'interpret', got {flagged_mode!r}")
+    return {"backend": jax.default_backend(), "default_mode": default_mode,
+            "flagged_mode": flagged_mode}
+
+
+def run() -> list[str]:
+    rows = []
+    blob = {"dispatch": _check_dispatch(), "kernels": {}}
+
+    cases = []
+    for m, b in ((8, 33), (32, 256), (96, 500)):
+        lut = jax.random.uniform(jax.random.fold_in(KEY, m), (m, 256))
+        codes = jax.random.randint(jax.random.fold_in(KEY, b), (b, m),
+                                   0, 256).astype(jnp.uint8)
+        got = adc_distance_pallas(lut, codes, interpret=True)
+        cases.append(("adc_distance", f"m{m}_b{b}", got,
+                      ref.adc_distance_ref(lut, codes), 1e-4))
+    for p, d, g in ((17, 48, 4), (100, 768, 8)):
+        q = jax.random.normal(jax.random.fold_in(KEY, d), (d,))
+        xs = jax.random.normal(jax.random.fold_in(KEY, p), (p, d))
+        got = rerank_l2_pallas(q, xs, group=g, interpret=True)
+        cases.append(("rerank_l2", f"p{p}_d{d}", got,
+                      ref.rerank_l2_ref(q, xs), 1e-3))
+    for p, n in ((16, 40), (64, 384)):
+        pd = jax.random.uniform(jax.random.fold_in(KEY, p), (p,))
+        nd = jax.random.uniform(jax.random.fold_in(KEY, n), (n,))
+        pi = jnp.arange(p, dtype=jnp.int32)
+        ni = 1000 + jnp.arange(n, dtype=jnp.int32)
+        gd, gi = pool_merge_pallas(pd, pi, nd, ni, interpret=True)
+        wd, wi = ref.pool_merge_ref(pd, pi, nd, ni)
+        cases.append(("pool_merge_d", f"p{p}_n{n}", gd, wd, 1e-6))
+        cases.append(("pool_merge_ids", f"p{p}_n{n}",
+                      gi.astype(jnp.float32), wi.astype(jnp.float32), 0.0))
+
+    ok = True
+    for kernel, label, got, want, tol in cases:
+        err = float(jnp.max(jnp.abs(jnp.asarray(got, jnp.float32) -
+                                    jnp.asarray(want, jnp.float32))))
+        passed = err <= tol if tol else err == 0.0
+        ok &= passed
+        blob["kernels"][f"{kernel}_{label}"] = {
+            "max_abs_err": err, "tol": tol, "pass": bool(passed)}
+        rows.append(Cm.fmt_row(f"parity_{kernel}_{label}",
+                               max_abs_err=err, ok=int(passed)))
+
+    path = Cm.write_json("kernels/parity.json", blob)
+    rows.append(f"# wrote {path}")
+    if not ok:
+        raise SystemExit("kernel interpret-vs-ref parity FAILED")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

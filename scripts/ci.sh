@@ -19,3 +19,11 @@ python -m pytest --strict-markers -q "$@"
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.concurrent --smoke
+
+# Kernel dispatch parity (interpret-mode Pallas vs the jnp oracles the
+# off-TPU engine runs) + traversal-state scaling (hashed visited sets must
+# be flat in n_max); both exit non-zero on violation.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.kernel_parity
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.footprint --state-scaling

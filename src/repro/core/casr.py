@@ -22,9 +22,9 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import pq as pq_mod
 from repro.core.iomodel import IOCounters, PAGE_BYTES
 from repro.core.layout import GraphStore, LayoutSpec
+from repro.kernels import ops as kernel_ops
 
 INF = jnp.float32(3.4e38)
 
@@ -43,10 +43,11 @@ class CASRResult(NamedTuple):
 
 def _topk_ids(ids: jax.Array, d: jax.Array, k: int) -> tuple[jax.Array,
                                                              jax.Array]:
-    """Smallest-k by d; ties broken by position (stable)."""
-    neg, idx = lax.top_k(-d, k)
-    sel = jnp.where(neg > -INF, ids[idx], -1)
-    return sel, -neg
+    """Smallest-k by d; ties broken by position (stable).  Runs through the
+    kernel-dispatched pool merge (the candidate array is the "pool" prefix
+    merged with its own tail)."""
+    out_d, out_i = kernel_ops.pool_merge(d[:k], ids[:k], d[k:], ids[k:])
+    return jnp.where(out_d < INF, out_i, -1), out_d
 
 
 def _charge_vec_reads(counters: IOCounters, spec: LayoutSpec,
@@ -86,7 +87,8 @@ def casr_rerank(store: GraphStore, spec: LayoutSpec, q: jax.Array,
         take = in_group & valid & ~loaded
         n = take.sum()
         counters = _charge_vec_reads(counters, spec, n)
-        d = jnp.where(take, pq_mod.exact_l2(q, store.vectors[safe]), exact_d)
+        d = jnp.where(take, kernel_ops.rerank_l2(q, store.vectors[safe]),
+                      exact_d)
         return d, loaded | take, counters, n
 
     # pipeline start: group 0 is loaded before the loop (Alg 1 line 3)
@@ -177,14 +179,13 @@ def casr_stop_point(q: jax.Array, vectors: jax.Array, pool_ids: jax.Array,
     """
     P = pool_ids.shape[0]
     valid = pool_ids >= 0
-    d_all = jnp.where(valid, pq_mod.exact_l2(
+    d_all = jnp.where(valid, kernel_ops.rerank_l2(
         q, vectors[jnp.maximum(pool_ids, 0)]), INF)
     max_groups = -(-P // s)
 
     def topk_at(g):
         known = jnp.where(jnp.arange(P) < g * s, d_all, INF)
-        neg, idx = lax.top_k(-known, k)
-        return jnp.where(neg > -INF, pool_ids[idx], -1)
+        return _topk_ids(pool_ids, known, k)[0]
 
     def cond(c):
         g, done = c

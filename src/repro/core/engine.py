@@ -41,6 +41,7 @@ from repro.core import search as search_mod
 from repro.core.iomodel import (IOCounters, PAGE_BYTES, merge_counters,
                                 sum_counters)
 from repro.core.layout import GraphStore, LayoutSpec
+from repro.kernels import ops as kernel_ops
 
 INF = jnp.float32(3.4e38)
 
@@ -67,6 +68,7 @@ class EngineSpec:
     k: int = 10
     beam_width: int = 4
     max_hops: int = 256
+    visited_impl: str = "hash"          # hash (O(1) state) | bitmap (ref)
     s_search: int = 4                   # CASR group size (search path)
     s_pos: int = 8                      # CASR group size (position seeking)
     cache_capacity_pages: int = 1024
@@ -267,7 +269,7 @@ class Engine:
         def use_ent(_):
             entries, e_ent, _ = search_mod.entrance_search(
                 state.ent, lut, state.codes, n_entry=spec.n_entry,
-                pool_size=spec.ent_pool)
+                pool_size=spec.ent_pool, visited=spec.visited_impl)
             return entries, e_ent
 
         def use_default(_):
@@ -313,7 +315,8 @@ class Engine:
         res = search_mod.disk_traverse(
             state.store, spec.lspec, lut, state.codes, state.cache, ctr0,
             entries, pool_size=spec.e_search, beam_width=spec.beam_width,
-            max_hops=spec.max_hops, frozen_cache=frozen)
+            max_hops=spec.max_hops, frozen_cache=frozen,
+            visited=spec.visited_impl)
         ctr = res.counters
         pool = jnp.where(state.tombstone[jnp.maximum(res.pool_ids, 0)],
                          -1, res.pool_ids)
@@ -352,14 +355,13 @@ class Engine:
     def _merge_buffer_hits(self, state, q, ids, dists):
         spec = self.spec
         bvalid = jnp.arange(spec.buffer_max) < state.buf_count
-        bd = jnp.where(bvalid, pq_mod.exact_l2(q, state.buf_vecs), INF)
+        bd = jnp.where(bvalid, kernel_ops.rerank_l2(q, state.buf_vecs), INF)
         # buffer ids are virtual: n_max + slot (not yet in the graph)
         bids = (state.store.n_max + jnp.arange(spec.buffer_max)).astype(
             jnp.int32)
-        all_d = jnp.concatenate([jnp.where(ids >= 0, dists, INF), bd])
-        all_i = jnp.concatenate([ids, bids])
-        neg, sel = lax.top_k(-all_d, spec.k)
-        return jnp.where(neg > -INF, all_i[sel], -1), -neg
+        d, i = kernel_ops.pool_merge(jnp.where(ids >= 0, dists, INF), ids,
+                                     bd, bids)
+        return jnp.where(d < INF, i, -1), d
 
     # -- insert ---------------------------------------------------------------
 
@@ -392,7 +394,8 @@ class Engine:
                 state.cache, ctr0, v, entries, e_pos=spec.e_pos, k=spec.k,
                 s=spec.s_pos, rerank=spec.rerank,
                 beam_width=spec.beam_width, max_hops=spec.max_hops,
-                tombstone=state.tombstone, page_seen=page_seen)
+                tombstone=state.tombstone, page_seen=page_seen,
+                visited=spec.visited_impl)
             ctr = ires.counters
             if spec.rerank == "full":
                 ctr = self._reclassify(ctr, v, ires.pool_ids, ires.store,
@@ -416,8 +419,14 @@ class Engine:
             stats = _delta_stats(IOCounters.zeros(), IOCounters.zeros(),
                                  jnp.zeros((), jnp.int32),
                                  dropped=jnp.ones((), bool))
+            # must match the do-branch's page buffer structure: the seeded
+            # buffer when given, else an empty set of the same kind/shape
+            # disk_traverse would have created
             seen = (page_seen if page_seen is not None else
-                    jnp.zeros_like(state.store.page_live, dtype=bool))
+                    search_mod.empty_page_seen(
+                        state.store, visited=spec.visited_impl,
+                        max_hops=spec.max_hops,
+                        beam_width=spec.beam_width))
             return stats, state, seen
 
         return lax.cond(full, skip, do, state)
@@ -640,7 +649,8 @@ class Engine:
                 state.cache, ctr0, v, entries, e_pos=spec.e_pos,
                 k=spec.k, s=spec.s_pos, rerank=spec.rerank,
                 beam_width=spec.beam_width, max_hops=spec.max_hops,
-                tombstone=state.tombstone, frozen_cache=True)
+                tombstone=state.tombstone, frozen_cache=True,
+                visited=spec.visited_impl)
             ctr = seek.counters
             if spec.rerank == "full":
                 ctr = self._reclassify(ctr, v, seek.pool_ids, state.store,
@@ -733,7 +743,8 @@ class Engine:
                 res = search_mod.disk_traverse(
                     state.store, spec.lspec, lut, state.codes, state.cache,
                     IOCounters.zeros(), entries, pool_size=pool_size,
-                    beam_width=spec.beam_width, max_hops=spec.max_hops)
+                    beam_width=spec.beam_width, max_hops=spec.max_hops,
+                    visited=spec.visited_impl)
                 return res.pool_ids
             return jax.lax.map(one, queries, batch_size=16)
 

@@ -329,17 +329,20 @@ def position_seek(store: GraphStore, spec: LayoutSpec, codec: pq_mod.PQCodec,
                   rerank: str = "casr", beam_width: int = 4,
                   max_hops: int = 512, tombstone: jax.Array | None = None,
                   page_seen: jax.Array | None = None,
-                  frozen_cache: bool = False) -> SeekResult:
+                  frozen_cache: bool = False,
+                  visited: str = "hash") -> SeekResult:
     """① Position seeking: traverse + rerank + neighbor selection, no
     structural mutation.  Pure in the engine state, so a whole insert wave
     runs concurrently under ``vmap`` with ``frozen_cache=True`` (each seek
     probes the cache snapshot and records its page-access trace, exactly
-    like the search fan-out)."""
+    like the search fan-out).  ``visited`` picks the traversal's visited
+    sets — "hash" keeps per-seek state independent of the corpus, so an
+    insert wave's memory is bounded by the frontier, not ``n_max``."""
     lut = pq_mod.adc_lut(codec, new_vec)
     res = search_mod.disk_traverse(
         store, spec, lut, codes, cache, counters, entry_ids,
         pool_size=e_pos, beam_width=beam_width, max_hops=max_hops,
-        page_seen=page_seen, frozen_cache=frozen_cache)
+        page_seen=page_seen, frozen_cache=frozen_cache, visited=visited)
     counters = res.counters
     cache = res.cache
     pool_ids = res.pool_ids
@@ -389,7 +392,8 @@ def insert_vertex(store: GraphStore, spec: LayoutSpec, codec: pq_mod.PQCodec,
                   e_pos: int, k: int, s: int, rerank: str = "casr",
                   beam_width: int = 4, max_hops: int = 512,
                   tombstone: jax.Array | None = None,
-                  page_seen: jax.Array | None = None) -> InsertResult:
+                  page_seen: jax.Array | None = None,
+                  visited: str = "hash") -> InsertResult:
     """One in-place insertion.  ``rerank``: "casr" | "full" (static).
 
     The caller encodes the new vector into ``codes[store.count]`` *before*
@@ -400,7 +404,8 @@ def insert_vertex(store: GraphStore, spec: LayoutSpec, codec: pq_mod.PQCodec,
     seek = position_seek(
         store, spec, codec, codes, cache, counters, new_vec, entry_ids,
         e_pos=e_pos, k=k, s=s, rerank=rerank, beam_width=beam_width,
-        max_hops=max_hops, tombstone=tombstone, page_seen=page_seen)
+        max_hops=max_hops, tombstone=tombstone, page_seen=page_seen,
+        visited=visited)
     sres = commit_insert(store, spec, seek.cache, seek.counters, new_vec,
                          seek.nbrs, codes, sym_tables)
     return InsertResult(store=sres.store, cache=sres.cache,

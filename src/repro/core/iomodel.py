@@ -38,6 +38,9 @@ class IOCounters:
     cache_hits: jax.Array
     cache_misses: jax.Array
     hops: jax.Array
+    # hashed-visited-set saturation events (impossible at default capacity;
+    # a saturated traversal may re-expand vertices, re-charging I/O only)
+    visited_overflow: jax.Array
 
     @classmethod
     def zeros(cls) -> "IOCounters":

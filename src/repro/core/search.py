@@ -6,13 +6,24 @@ decoupled layout (packed layout drags vectors along — counted).  A fixed
 size explored pool (|E_search| for queries, |E_pos| for position seeking) is
 maintained until convergence.
 
-Everything is jittable: the pool, visited bitmap, cache state and I/O
+Everything is jittable: the pool, visited sets, cache state and I/O
 counters thread through a ``lax.while_loop``.
+
+Traversal state is O(1) in the corpus: the ``expanded`` / ``vec_loaded`` /
+``page_seen`` sets are fixed-capacity hash sets bounded by the search
+frontier (``max_hops × beam_width`` marks — see :mod:`repro.core.visited`),
+not ``[n_max]`` bitmaps, so a B-lane fan-out wave costs
+``O(B·max_hops·beam_width)`` memory instead of ``O(B·n_max)``.  The
+``visited="bitmap"`` mode keeps the dense reference implementation
+(equivalence tests / ablation).  Per-hop examination compute (ADC
+distances, exact L2, pool merge) routes through the backend-dispatched
+kernel layer (:mod:`repro.kernels.ops`): Pallas Mosaic on TPU, the jnp
+oracles elsewhere.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
+import math
 from typing import NamedTuple
 
 import jax
@@ -20,61 +31,73 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import cache as cache_mod
-from repro.core import pq as pq_mod
+from repro.core import visited as visited_mod
 from repro.core.entrance import EntranceGraph, empty_entrance  # noqa: F401
 from repro.core.iomodel import IOCounters, PAGE_BYTES
 from repro.core.layout import GraphStore, LayoutSpec
+from repro.kernels import ops as kernel_ops
 
 INF = jnp.float32(3.4e38)
 
 
 def entrance_search(ent: EntranceGraph, lut: jax.Array, codes: jax.Array,
                     *, n_entry: int, pool_size: int = 32,
-                    max_hops: int = 64):
+                    max_hops: int = 64, visited: str = "hash"):
     """In-memory beam search over the entrance graph (no storage I/O).
 
     Returns (entry ids [n_entry] into the MAIN graph, explored-set main ids
     E_ent [pool_size] with their PQ distances) — the explored set feeds
     NAVIS-update (Algorithm 2).
+
+    The ``expanded`` set is a hash set of ≤ ``min(max_hops, c_max)`` slots
+    (one expansion per hop), so per-query state does not scale with the
+    entrance graph; ``visited="bitmap"`` keeps the dense reference.
     """
     c = ent.c_max
-    # seed: first live entry (build keeps a medoid-ish vertex at index 0)
-    seed = jnp.zeros((1,), jnp.int32)
+    # seed: the first *live* entry slot.  Build keeps a medoid-ish vertex at
+    # slot 0, but deletes scrub entrance members — after the medoid dies the
+    # seed must fall back to the next live slot, not a dead one.
+    live = ent.ids >= 0
+    seed = jnp.argmax(live).astype(jnp.int32)[None]
     seed_main = ent.ids[seed]
     seed_d = jnp.where(seed_main >= 0,
-                       pq_mod.adc_distance(lut, codes[jnp.maximum(
+                       kernel_ops.adc_distance(lut, codes[jnp.maximum(
                            seed_main, 0)]), INF)
 
     pool_idx = jnp.full((pool_size,), -1, jnp.int32).at[0].set(seed[0])
     pool_d = jnp.full((pool_size,), INF).at[0].set(seed_d[0])
-    expanded = jnp.zeros((c,), bool)
+    if visited == "bitmap":
+        expanded = visited_mod.make_dense(c)
+    else:
+        # one expansion per hop, at most c distinct slots: never overflows
+        expanded = visited_mod.make_hash(min(max_hops, c))
+    unexp0 = pool_idx >= 0
 
     def cond(carry):
-        pool_idx, pool_d, expanded, hops = carry
-        frontier = (pool_idx >= 0) & ~expanded[jnp.maximum(pool_idx, 0)]
-        return (hops < max_hops) & frontier.any()
+        unexp, hops = carry[3], carry[4]
+        return (hops < max_hops) & unexp.any()
 
     def body(carry):
-        pool_idx, pool_d, expanded, hops = carry
-        cand_d = jnp.where((pool_idx >= 0) &
-                           ~expanded[jnp.maximum(pool_idx, 0)], pool_d, INF)
+        pool_idx, pool_d, expanded, unexp, hops = carry
+        cand_d = jnp.where(unexp, pool_d, INF)
         best = jnp.argmin(cand_d)
         v = pool_idx[best]
-        expanded = expanded.at[v].set(True)
+        expanded = visited_mod.add(expanded, v[None], jnp.ones((1,), bool))
         nbrs = ent.edges[v]                                   # [R_ent]
         in_pool = (nbrs[:, None] == pool_idx[None, :]).any(axis=1)
-        valid = (nbrs >= 0) & ~expanded[jnp.maximum(nbrs, 0)] & ~in_pool
+        valid = (nbrs >= 0) & ~visited_mod.contains(expanded, nbrs) & \
+            ~in_pool
         main_ids = ent.ids[jnp.maximum(nbrs, 0)]
         d = jnp.where(valid & (main_ids >= 0),
-                      pq_mod.adc_distance(lut, codes[jnp.maximum(
+                      kernel_ops.adc_distance(lut, codes[jnp.maximum(
                           main_ids, 0)]), INF)
-        all_idx = jnp.concatenate([pool_idx, jnp.where(valid, nbrs, -1)])
-        all_d = jnp.concatenate([pool_d, d])
-        neg_d, order = lax.top_k(-all_d, pool_size)
-        return (all_idx[order], -neg_d, expanded, hops + 1)
+        pool_d, pool_idx = kernel_ops.pool_merge(
+            pool_d, pool_idx, d, jnp.where(valid, nbrs, -1))
+        unexp = (pool_idx >= 0) & ~visited_mod.contains(expanded, pool_idx)
+        return (pool_idx, pool_d, expanded, unexp, hops + 1)
 
-    pool_idx, pool_d, expanded, hops = lax.while_loop(
-        cond, body, (pool_idx, pool_d, expanded,
+    pool_idx, pool_d, expanded, _, hops = lax.while_loop(
+        cond, body, (pool_idx, pool_d, expanded, unexp0,
                      jnp.zeros((), jnp.int32)))
     main = jnp.where(pool_idx >= 0, ent.ids[jnp.maximum(pool_idx, 0)], -1)
     return main[:n_entry], main, pool_d
@@ -87,11 +110,13 @@ def entrance_search(ent: EntranceGraph, lut: jax.Array, codes: jax.Array,
 class TraverseResult(NamedTuple):
     pool_ids: jax.Array       # [pool] main-graph ids sorted by PQ distance
     pool_dists: jax.Array     # [pool] PQ distances
-    vec_loaded: jax.Array     # [N_max] bool — vectors dragged in (packed)
+    vec_loaded: visited_mod.VisitedSet   # vectors dragged in (packed)
     hops: jax.Array
     cache: cache_mod.CacheState
     counters: IOCounters
-    page_seen: jax.Array      # [P_max] bool — pages this traversal read
+    # pages this traversal read: a VisitedSet, or a raw [P_max] bool array
+    # when the caller seeded one (bulk-merge sharing) / bitmap mode
+    page_seen: jax.Array | visited_mod.VisitedSet
     # frozen-cache mode only (else None): charged page accesses, in order
     trace: jax.Array | None = None       # [max_hops * W] int32, -1 padded
     trace_n: jax.Array | None = None     # int32 — valid trace entries
@@ -139,16 +164,18 @@ def _charge_access(counters: IOCounters, spec: LayoutSpec,
 
 def fetch_edgelists(store: GraphStore, spec: LayoutSpec,
                     cache: cache_mod.CacheState, counters: IOCounters,
-                    page_seen: jax.Array, ids: jax.Array, valid: jax.Array,
+                    page_seen: visited_mod.VisitedSet, ids: jax.Array,
+                    valid: jax.Array,
                     trace: jax.Array | None = None,
                     trace_n: jax.Array | None = None):
     """Read the edge pages backing ``ids`` (beam of W vertices) through the
-    per-query buffer (``page_seen``) and the host cache.  Pages already read
-    by *this* traversal are free (the query holds them in its scratch
-    buffer, as DiskANN-lineage systems do) — this is where the decoupled
-    layout's page-level locality pays off, since ~``edgelists_per_page``
-    co-traversed vertices ride on one read.  Packed layout: the page also
-    carries the vertices' vectors (marked loaded by the caller).
+    per-query buffer (``page_seen``, a visited set) and the host cache.
+    Pages already read by *this* traversal are free (the query holds them in
+    its scratch buffer, as DiskANN-lineage systems do) — this is where the
+    decoupled layout's page-level locality pays off, since
+    ~``edgelists_per_page`` co-traversed vertices ride on one read.  Packed
+    layout: the page also carries the vertices' vectors (marked loaded by
+    the caller).
 
     With ``trace``/``trace_n`` supplied the cache is treated as a *frozen
     snapshot*: hits come from :func:`cache_mod.lookup` (pure), the cache is
@@ -173,7 +200,8 @@ def fetch_edgelists(store: GraphStore, spec: LayoutSpec,
         # duplicate of an earlier valid slot in this beam
         eq_earlier = (pages[:, None] == pages[None, :]) & valid[None, :] & \
             (jnp.arange(w)[None, :] < jnp.arange(w)[:, None])
-        charged = valid & ~page_seen[safe_p] & ~eq_earlier.any(axis=1)
+        charged = valid & ~visited_mod.contains(page_seen, pages) & \
+            ~eq_earlier.any(axis=1)
         hit = cache_mod.lookup(cache, safe_p) & charged
         n_hit = hit.sum()
         n_miss = charged.sum() - n_hit
@@ -188,8 +216,7 @@ def fetch_edgelists(store: GraphStore, spec: LayoutSpec,
                         trace.shape[0])
         trace = trace.at[pos].set(pages)
         trace_n = trace_n + charged.sum().astype(jnp.int32)
-        page_seen = page_seen.at[jnp.where(valid, safe_p,
-                                           page_seen.shape[0])].set(True)
+        page_seen = visited_mod.add(page_seen, pages, valid)
     else:
         def step(carry, i):
             cache_c, counters, page_seen = carry
@@ -198,7 +225,7 @@ def fetch_edgelists(store: GraphStore, spec: LayoutSpec,
             # by this traversal (per-query buffer)
             earlier = jnp.arange(w) < i
             dup = jnp.any((pages == page) & valid & earlier)
-            dup = dup | ~valid[i] | page_seen[jnp.maximum(page, 0)]
+            dup = dup | ~valid[i] | visited_mod.contains(page_seen, page)
 
             def charged(args):
                 cache_c, counters = args
@@ -207,8 +234,8 @@ def fetch_edgelists(store: GraphStore, spec: LayoutSpec,
 
             cache_c, counters = lax.cond(dup, lambda a: a, charged,
                                          (cache_c, counters))
-            page_seen = page_seen.at[jnp.maximum(page, 0)].set(
-                page_seen[jnp.maximum(page, 0)] | valid[i])
+            page_seen = visited_mod.add(page_seen, page[None],
+                                        valid[i][None])
             return (cache_c, counters, page_seen), None
 
         (cache, counters, page_seen), _ = lax.scan(
@@ -217,20 +244,80 @@ def fetch_edgelists(store: GraphStore, spec: LayoutSpec,
     return edges, cache, counters, page_seen, trace, trace_n
 
 
+def make_traversal_state(*, visited: str, pool_size: int, beam_width: int,
+                         max_hops: int, n_max: int, p_max: int,
+                         visited_capacity: int | None = None,
+                         frozen: bool = False):
+    """The per-query traversal state ``disk_traverse`` carries — the ONE
+    place the capacity recipe lives (``traversal_state_bytes`` and the
+    footprint benchmark account the same structures).
+
+    Expansion marks ≤ ``beam_width`` ids/pages per hop for ≤ ``max_hops``
+    hops, so ``max_hops × beam_width`` bounds ``expanded``/``page_seen``
+    exactly; ``vec_loaded`` additionally absorbs ``full_rerank`` marking
+    the surviving pool.  Returns (expanded, vec_loaded, page_seen, trace)
+    — ``trace`` is None unless ``frozen``.
+    """
+    cap = (visited_capacity if visited_capacity is not None
+           else max_hops * beam_width)
+    if visited == "bitmap":
+        sets = (visited_mod.make_dense(n_max),
+                visited_mod.make_dense(n_max),
+                visited_mod.make_dense(p_max))
+    else:
+        sets = (visited_mod.make_hash(cap),
+                visited_mod.make_hash(cap + pool_size),
+                visited_mod.make_hash(cap))
+    trace = (jnp.full((max_hops * beam_width,), -1, jnp.int32)
+             if frozen else None)
+    return sets + (trace,)
+
+
+def _wrap_page_seen(page_seen, default: visited_mod.VisitedSet,
+                    visited: str):
+    """Normalise the caller's page buffer into a visited set.
+
+    Returns (set, raw) — ``raw=True`` when the result must be handed back
+    as a raw dense bool array (caller seeded one for bulk-merge sharing,
+    or legacy bitmap mode)."""
+    if page_seen is None:
+        return default, visited == "bitmap"
+    if isinstance(page_seen, (visited_mod.DenseVisited,
+                              visited_mod.HashVisited)):
+        return page_seen, False
+    return visited_mod.DenseVisited(page_seen), True
+
+
+def empty_page_seen(store: GraphStore, *, visited: str = "hash",
+                    max_hops: int, beam_width: int,
+                    visited_capacity: int | None = None):
+    """An empty per-query page buffer matching what ``disk_traverse`` would
+    create for these parameters (callers that need a structurally matching
+    placeholder, e.g. masked branches of an insert)."""
+    _, _, ps, _ = make_traversal_state(
+        visited=visited, pool_size=1, beam_width=beam_width,
+        max_hops=max_hops, n_max=store.n_max,
+        p_max=store.page_live.shape[0], visited_capacity=visited_capacity)
+    return ps.bits if visited == "bitmap" else ps
+
+
 def disk_traverse(store: GraphStore, spec: LayoutSpec, lut: jax.Array,
                   codes: jax.Array, cache: cache_mod.CacheState,
                   counters: IOCounters, entry_ids: jax.Array, *,
                   pool_size: int, beam_width: int = 4,
                   max_hops: int = 512,
-                  page_seen: jax.Array | None = None,
-                  frozen_cache: bool = False) -> TraverseResult:
+                  page_seen=None,
+                  frozen_cache: bool = False,
+                  visited: str = "hash",
+                  visited_capacity: int | None = None) -> TraverseResult:
     """Greedy beam search over the on-disk graph with PQ distances.
 
     ``entry_ids``: [n_entry] main-graph ids (-1 padded) from ① entry-point
     selection.  Pool converges when no unexpanded candidate remains among
     the top ``pool_size``.  ``page_seen`` optionally seeds the per-query
     page buffer (bulk merges share one buffer across many seeks so repeated
-    page reads amortise — FreshDiskANN's batched-I/O advantage).
+    page reads amortise — FreshDiskANN's batched-I/O advantage); it may be
+    a raw dense bool array or a :mod:`repro.core.visited` set.
 
     ``frozen_cache=True`` runs the traversal as a pure *reader* of the
     cache snapshot: no cache mutation threads through the loop (so a batch
@@ -239,13 +326,22 @@ def disk_traverse(store: GraphStore, spec: LayoutSpec, lut: jax.Array,
     ordered replay into the shared cache afterwards.  Both fan-outs ride
     on this: ``search_many`` (|E_search| pools) and ``insert_many``'s
     position-seek phase (|E_pos| pools via :func:`insert.position_seek`).
+
+    ``visited="hash"`` (default) bounds per-query state by the frontier:
+    expansion marks at most ``beam_width`` ids per hop, so
+    ``max_hops × beam_width`` is an exact capacity bound and the hash sets
+    behave bit-identically to the ``visited="bitmap"`` reference.
+    ``visited_capacity`` overrides the bound (smaller values saturate: the
+    traversal may re-expand vertices, re-charging I/O — counted in
+    ``counters.visited_overflow`` — but results stay well-formed).
     """
     n_max = store.n_max
     n_entry = entry_ids.shape[0]
 
     safe_e = jnp.maximum(entry_ids, 0)
     e_valid = entry_ids >= 0
-    e_d = jnp.where(e_valid, pq_mod.adc_distance(lut, codes[safe_e]), INF)
+    e_d = jnp.where(e_valid, kernel_ops.adc_distance(lut, codes[safe_e]),
+                    INF)
     order = jnp.argsort(e_d)
     pool_ids = jnp.full((pool_size,), -1, jnp.int32)
     pool_d = jnp.full((pool_size,), INF)
@@ -253,47 +349,41 @@ def disk_traverse(store: GraphStore, spec: LayoutSpec, lut: jax.Array,
     pool_ids = pool_ids.at[:k].set(
         jnp.where(e_valid[order][:k], entry_ids[order][:k], -1))
     pool_d = pool_d.at[:k].set(e_d[order][:k])
-    expanded = jnp.zeros((n_max,), bool)
-    vec_loaded = jnp.zeros((n_max,), bool)
-    if page_seen is None:
-        page_seen = jnp.zeros_like(store.page_live, dtype=bool)
-    if frozen_cache:
-        # each hop charges ≤ beam_width accesses, so this never overflows
-        trace0 = jnp.full((max_hops * beam_width,), -1, jnp.int32)
-        trace_n0 = jnp.zeros((), jnp.int32)
-    else:
-        trace0, trace_n0 = None, None
+    expanded, vec_loaded, default_ps, trace0 = make_traversal_state(
+        visited=visited, pool_size=pool_size, beam_width=beam_width,
+        max_hops=max_hops, n_max=n_max, p_max=store.page_live.shape[0],
+        visited_capacity=visited_capacity, frozen=frozen_cache)
+    ps, raw_pages = _wrap_page_seen(page_seen, default_ps, visited)
+    ovf0 = visited_mod.overflow(ps)
+    # each hop charges ≤ beam_width accesses, so the trace never overflows
+    trace_n0 = jnp.zeros((), jnp.int32) if frozen_cache else None
+    unexp0 = pool_ids >= 0
 
     def cond(carry):
-        pool_ids, hops = carry[0], carry[-1]
-        expanded = carry[2]
-        frontier = (pool_ids >= 0) & ~expanded[jnp.maximum(pool_ids, 0)]
-        return (hops < max_hops) & frontier.any()
+        unexp, hops = carry[2], carry[-1]
+        return (hops < max_hops) & unexp.any()
 
     def body(carry):
         if frozen_cache:
-            (pool_ids, pool_d, expanded, vec_loaded, page_seen,
+            (pool_ids, pool_d, unexp, expanded, vec_loaded, ps,
              trace, trace_n, counters, hops) = carry
             cache_in = cache                  # closed-over snapshot
         else:
-            (pool_ids, pool_d, expanded, vec_loaded, page_seen,
+            (pool_ids, pool_d, unexp, expanded, vec_loaded, ps,
              cache_in, counters, hops) = carry
             trace, trace_n = None, None
-        unexp = (pool_ids >= 0) & ~expanded[jnp.maximum(pool_ids, 0)]
         cand_d = jnp.where(unexp, pool_d, INF)
         # top_k (stable, like argsort) is O(n) selection, not a full sort
         neg_sel, sel = lax.top_k(-cand_d, beam_width)
         beam = jnp.where(-neg_sel < INF, pool_ids[sel], -1)
         beam_valid = beam >= 0
-        expanded = expanded.at[jnp.maximum(beam, 0)].set(
-            expanded[jnp.maximum(beam, 0)] | beam_valid)
+        expanded = visited_mod.add(expanded, beam, beam_valid)
 
-        edges, cache_out, counters, page_seen, trace, trace_n = \
-            fetch_edgelists(store, spec, cache_in, counters, page_seen,
+        edges, cache_out, counters, ps, trace, trace_n = \
+            fetch_edgelists(store, spec, cache_in, counters, ps,
                             beam, beam_valid, trace, trace_n)
         if spec.kind == "packed":
-            vec_loaded = vec_loaded.at[jnp.maximum(beam, 0)].set(
-                vec_loaded[jnp.maximum(beam, 0)] | beam_valid)
+            vec_loaded = visited_mod.add(vec_loaded, beam, beam_valid)
 
         # Vamana semantics: the explored pool is a *set* — candidates evicted
         # from it may be re-scored and re-enter later; only expansion is
@@ -302,7 +392,8 @@ def disk_traverse(store: GraphStore, spec: LayoutSpec, lut: jax.Array,
         nbrs = edges.reshape(-1)                              # [W*R]
         safe_n = jnp.maximum(nbrs, 0)
         in_pool = (nbrs[:, None] == pool_ids[None, :]).any(axis=1)
-        nvalid = (nbrs >= 0) & ~expanded[safe_n] & ~in_pool
+        nvalid = (nbrs >= 0) & ~visited_mod.contains(expanded, nbrs) & \
+            ~in_pool
         # dedupe within the flat neighbor list (first occurrence wins):
         # sort the W*R keys instead of scattering through an O(n_max)
         # position table — the stable sort keeps the lowest flat index
@@ -314,32 +405,61 @@ def disk_traverse(store: GraphStore, spec: LayoutSpec, lut: jax.Array,
             jnp.ones((1,), bool), sorted_key[1:] != sorted_key[:-1]])
         keep = jnp.zeros_like(nvalid).at[sort_idx].set(first)
         nvalid = nvalid & keep
-        nd = jnp.where(nvalid, pq_mod.adc_distance(lut, codes[safe_n]), INF)
+        nd = jnp.where(nvalid,
+                       kernel_ops.adc_distance(lut, codes[safe_n]), INF)
 
-        all_ids = jnp.concatenate([pool_ids, jnp.where(nvalid, nbrs, -1)])
-        all_d = jnp.concatenate([pool_d, nd])
-        neg_d, order = lax.top_k(-all_d, pool_size)
-        pool_ids, pool_d = all_ids[order], -neg_d
+        pool_d, pool_ids = kernel_ops.pool_merge(
+            pool_d, pool_ids, nd, jnp.where(nvalid, nbrs, -1))
+        unexp = (pool_ids >= 0) & ~visited_mod.contains(expanded, pool_ids)
         counters = dataclasses.replace(counters, hops=counters.hops + 1)
         if frozen_cache:
-            return (pool_ids, pool_d, expanded, vec_loaded, page_seen,
+            return (pool_ids, pool_d, unexp, expanded, vec_loaded, ps,
                     trace, trace_n, counters, hops + 1)
-        return (pool_ids, pool_d, expanded, vec_loaded, page_seen,
+        return (pool_ids, pool_d, unexp, expanded, vec_loaded, ps,
                 cache_out, counters, hops + 1)
 
     if frozen_cache:
-        carry = (pool_ids, pool_d, expanded, vec_loaded, page_seen,
+        carry = (pool_ids, pool_d, unexp0, expanded, vec_loaded, ps,
                  trace0, trace_n0, counters, jnp.zeros((), jnp.int32))
-        (pool_ids, pool_d, expanded, vec_loaded, page_seen, trace,
+        (pool_ids, pool_d, _, expanded, vec_loaded, ps, trace,
          trace_n, counters, hops) = lax.while_loop(cond, body, carry)
-        return TraverseResult(pool_ids, pool_d, vec_loaded, hops, cache,
-                              counters, page_seen, trace, trace_n)
-    carry = (pool_ids, pool_d, expanded, vec_loaded, page_seen,
-             cache, counters, jnp.zeros((), jnp.int32))
-    pool_ids, pool_d, expanded, vec_loaded, page_seen, cache, \
-        counters, hops = lax.while_loop(cond, body, carry)
-    return TraverseResult(pool_ids, pool_d, vec_loaded, hops, cache,
-                          counters, page_seen)
+        cache_out = cache
+    else:
+        carry = (pool_ids, pool_d, unexp0, expanded, vec_loaded, ps,
+                 cache, counters, jnp.zeros((), jnp.int32))
+        (pool_ids, pool_d, _, expanded, vec_loaded, ps, cache_out,
+         counters, hops) = lax.while_loop(cond, body, carry)
+        trace, trace_n = None, None
+    ovf = (visited_mod.overflow(expanded) + visited_mod.overflow(vec_loaded)
+           + visited_mod.overflow(ps) - ovf0).astype(jnp.int64)
+    counters = dataclasses.replace(
+        counters, visited_overflow=counters.visited_overflow + ovf)
+    return TraverseResult(pool_ids, pool_d, vec_loaded, hops, cache_out,
+                          counters, ps.bits if raw_pages else ps,
+                          trace, trace_n)
+
+
+# ---------------------------------------------------------------------------
+# Per-query traversal state accounting (footprint benchmark / tests)
+# ---------------------------------------------------------------------------
+
+def traversal_state_bytes(*, n_max: int, p_max: int, pool_size: int,
+                          beam_width: int, max_hops: int,
+                          visited: str = "hash",
+                          frozen: bool = False) -> int:
+    """Bytes of per-query traversal state ``disk_traverse`` carries
+    (expanded + vec_loaded + page_seen, + the trace in frozen fan-out
+    mode) — accounted over the very structures :func:`make_traversal_state`
+    hands the traversal, so this cannot drift from the implementation.
+    Pure shape math via ``eval_shape`` — nothing is allocated, so
+    million-vector hypotheticals are free."""
+    def build():
+        return make_traversal_state(
+            visited=visited, pool_size=pool_size, beam_width=beam_width,
+            max_hops=max_hops, n_max=n_max, p_max=p_max, frozen=frozen)
+
+    shapes = jax.tree.leaves(jax.eval_shape(build))
+    return int(sum(math.prod(s.shape) * s.dtype.itemsize for s in shapes))
 
 
 # ---------------------------------------------------------------------------
@@ -365,10 +485,13 @@ def full_rerank(store: GraphStore, spec: LayoutSpec, q: jax.Array,
             read_requests=counters.read_requests + n_loads,
             wasted_vec_bytes_read=counters.wasted_vec_bytes_read +
             n_loads * pages * PAGE_BYTES)
-        vec_loaded = res.vec_loaded.at[safe].set(
-            res.vec_loaded[safe] | valid)
+        vec_loaded = visited_mod.add(res.vec_loaded, ids, valid)
+        ovf = (visited_mod.overflow(vec_loaded) -
+               visited_mod.overflow(res.vec_loaded)).astype(jnp.int64)
+        counters = dataclasses.replace(
+            counters, visited_overflow=counters.visited_overflow + ovf)
     else:
         vec_loaded = res.vec_loaded
-    d = jnp.where(valid, pq_mod.exact_l2(q, store.vectors[safe]), INF)
+    d = jnp.where(valid, kernel_ops.rerank_l2(q, store.vectors[safe]), INF)
     order = jnp.argsort(d)
     return ids[order][:k], d[order][:k], vec_loaded, counters

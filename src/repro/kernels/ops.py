@@ -1,37 +1,99 @@
-"""Jitted public wrappers for the Pallas kernels.
+"""Backend-dispatched public wrappers for the hot-spot kernels.
 
-``interpret`` defaults to True off-TPU (this container is CPU-only; the
-kernels execute their bodies in Python via the Pallas interpreter, which
-validates the exact TPU program against the ref.py oracles).  On a real
-TPU backend the same calls compile to Mosaic.
+The engine's traversal/rerank hot loops call these three ops every hop;
+dispatch picks the fastest correct implementation per backend:
+
+==========  ==================================================
+backend     implementation
+==========  ==================================================
+TPU         Pallas Mosaic kernels (pq_adc / rerank_l2 / topk_pool)
+off-TPU     the pure-jnp ``ref.py`` oracles (XLA-fused; the
+            Pallas *interpreter* is orders of magnitude slower
+            and is NOT used unless explicitly requested)
+off-TPU +   Pallas interpret mode — opt-in via
+``NAVIS_KERNEL_INTERPRET=1``; validates the exact TPU program
+            against the oracles (CI parity smoke)
+==========  ==================================================
+
+The ref oracles compute the same math as the engine's previous inline
+jnp (``pq.adc_distance`` / ``pq.exact_l2`` / stable ``lax.top_k`` merge)
+*in the input dtype* (float64 stays float64 under x64), so off-TPU
+results match the pre-dispatch engine.
+
+The mode is resolved at trace time (``kernel_mode()`` reads the
+environment when a caller is first traced); set the flag before building
+engines.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 
+from repro.kernels import ref
 from repro.kernels.pq_adc import adc_distance_pallas
 from repro.kernels.rerank_l2 import rerank_l2_pallas
 from repro.kernels.topk_pool import pool_merge_pallas
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def kernel_mode() -> str:
+    """'mosaic' on TPU, else 'interpret' iff NAVIS_KERNEL_INTERPRET is a
+    truthy value, else 'ref'."""
+    if jax.default_backend() == "tpu":
+        return "mosaic"
+    if os.environ.get("NAVIS_KERNEL_INTERPRET", "") not in ("", "0"):
+        return "interpret"
+    return "ref"
 
 
-@functools.partial(jax.jit, static_argnames=("block_b",))
-def adc_distance(lut, codes, *, block_b: int = 256):
+# the ref oracles are NOT jit-wrapped here: engine hot loops call these
+# inside their own jit, and an extra jit boundary changes XLA fusion (and
+# thus float rounding at the last ulp) versus the previously-inlined jnp —
+# inlining keeps the off-TPU engine bit-identical to pre-dispatch.
+_adc_ref = ref.adc_distance_ref
+_rerank_ref = ref.rerank_l2_ref
+_merge_ref = ref.pool_merge_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def _adc_pallas(lut, codes, *, block_b, interpret):
     return adc_distance_pallas(lut, codes, block_b=block_b,
-                               interpret=not _on_tpu())
+                               interpret=interpret)
 
 
-@functools.partial(jax.jit, static_argnames=("group",))
-def rerank_l2(q, xs, *, group: int = 8):
-    return rerank_l2_pallas(q, xs, group=group, interpret=not _on_tpu())
+@functools.partial(jax.jit, static_argnames=("group", "interpret"))
+def _rerank_pallas(q, xs, *, group, interpret):
+    return rerank_l2_pallas(q, xs, group=group, interpret=interpret)
 
 
-@jax.jit
-def pool_merge(pool_d, pool_ids, new_d, new_ids):
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _merge_pallas(pool_d, pool_ids, new_d, new_ids, *, interpret):
     return pool_merge_pallas(pool_d, pool_ids, new_d, new_ids,
-                             interpret=not _on_tpu())
+                             interpret=interpret)
+
+
+def adc_distance(lut, codes, *, block_b: int = 256):
+    """lut: [M, 256]; codes: [B, M] uint8 -> [B] PQ distances."""
+    mode = kernel_mode()
+    if mode == "ref":
+        return _adc_ref(lut, codes)
+    return _adc_pallas(lut, codes, block_b=block_b,
+                       interpret=mode == "interpret")
+
+
+def rerank_l2(q, xs, *, group: int = 8):
+    """q: [D]; xs: [P, D] -> [P] exact squared L2."""
+    mode = kernel_mode()
+    if mode == "ref":
+        return _rerank_ref(q, xs)
+    return _rerank_pallas(q, xs, group=group, interpret=mode == "interpret")
+
+
+def pool_merge(pool_d, pool_ids, new_d, new_ids):
+    """Merge keeping the |pool| smallest (stable on ties, ascending)."""
+    mode = kernel_mode()
+    if mode == "ref":
+        return _merge_ref(pool_d, pool_ids, new_d, new_ids)
+    return _merge_pallas(pool_d, pool_ids, new_d, new_ids,
+                         interpret=mode == "interpret")
