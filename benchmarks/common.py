@@ -47,6 +47,11 @@ DATASETS = {
     # CI-scale corpus for `benchmarks.concurrent --smoke`
     "smoke": dict(n=600, dim=48, pq_m=24, n_clusters=10, noise=1.0,
                   r=16, e_search=32, e_pos=40, extra=300),
+    # benchmarks.churn: sized so "3× n_max total inserts" stays CPU-feasible
+    # (n_max = 600 ⇒ 1800 churn inserts per arm); stationary distribution
+    # so recall trajectories are comparable to the fresh-build baseline
+    "churn": dict(n=500, dim=48, pq_m=24, n_clusters=12, noise=1.0,
+                  r=16, e_search=40, e_pos=48, extra=100),
 }
 
 _BUNDLES: dict = {}

@@ -1,14 +1,20 @@
 """Streaming updates: concurrent search+insert with a drifting corpus,
 comparing NAVIS against OdinANN and FreshDiskANN — the paper's headline
-scenario (Fig 10) at laptop scale.
+scenario (Fig 10) at laptop scale — followed by a sustained delete+insert
+churn loop that leans on the maintenance subsystem (`Engine.consolidate`
+fires whenever `needs_consolidation` trips) to keep accepting writes
+forever instead of filling up.
 
     PYTHONPATH=src python examples/streaming_updates.py
 """
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from benchmarks import common as Cm   # enables x64 for exact counters
+from repro.data import insert_stream
 
 
 def main():
@@ -35,6 +41,43 @@ def main():
           "per-op I/O counters;\nsee benchmarks/concurrent.py for the full "
           "6-system × 2-dataset sweep\nand the insert fan-out scaling "
           "(experiments/concurrent/fig11.json).")
+    churn_loop()
+
+
+def churn_loop(cycles: int = 10, batch: int = 20):
+    """Delete+insert churn at full capacity: tombstone a wave, consolidate
+    when the trigger fires (reclaiming slots into the free list), insert a
+    wave into the reclaimed slots — acceptance stays 100% where the
+    pre-maintenance engine silently dropped every insert past n_max."""
+    print(f"\nchurn loop ({cycles} cycles × {batch} delete+insert, "
+          "maintenance on):")
+    eng, state, ds = Cm.build_engine("navis", "smoke",
+                                     consolidate_frac=0.15, ent_frac=0.05)
+    # fill the fresh headroom so churn exercises reclamation, not append
+    spare = int(state.store.n_max - state.store.count)
+    if spare:
+        _, state = eng.insert_many(state, insert_stream(
+            jax.random.PRNGKey(0), ds["cents"], spare, noise=ds["noise"]))
+    rng = np.random.default_rng(0)
+    dropped = consolidations = 0
+    for c in range(cycles):
+        live = np.flatnonzero(np.asarray(state.live_mask))
+        victims = rng.choice(live, batch, replace=False).astype(np.int32)
+        state = eng.delete_many(state, jnp.asarray(victims))
+        if bool(eng.needs_consolidation(state, lookahead=batch)):
+            mstats, state = eng.consolidate(state)
+            consolidations += 1
+            print(f"  cycle {c}: consolidate — reclaimed "
+                  f"{int(state.free_count)} slots, "
+                  f"{int(mstats.read_requests)} reads / "
+                  f"{int(mstats.write_requests)} writes charged")
+        wave = insert_stream(jax.random.fold_in(jax.random.PRNGKey(1), c),
+                             ds["cents"], batch, noise=ds["noise"])
+        stats, state = eng.insert_many(state, wave)
+        dropped += int(np.asarray(stats.dropped).sum())
+    print(f"  {cycles * batch} churn inserts at count=n_max="
+          f"{int(state.store.n_max)}: {dropped} dropped, "
+          f"{consolidations} consolidations, live={int(state.live_count)}")
 
 
 if __name__ == "__main__":

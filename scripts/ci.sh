@@ -27,3 +27,10 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.kernel_parity
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.footprint --state-scaling
+
+# Churn smoke (maintenance subsystem): delete+insert cycles with
+# consolidation on — exits non-zero if any insert drops, recall degrades
+# beyond tolerance of the fresh-build baseline, or live-vertex search
+# results change across a consolidation pass.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.churn --smoke

@@ -5,6 +5,8 @@ Public API:
     GraphStore / LayoutSpec                     (layout.py)
     build_graph / brute_force_topk / recall_at_k (graph.py)
     SSDModel / HBMModel / IOCounters            (iomodel.py)
+    Engine.consolidate / maintenance_step /
+        needs_consolidation                     (engine.py + maintenance.py)
 """
 from repro.core.engine import (Engine, EngineSpec, EngineState, OpStats,
                                PRESETS, preset)

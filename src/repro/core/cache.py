@@ -80,47 +80,59 @@ def init_cache(p_max: int, capacity_pages: int, policy: str,
 # NAVIS policy
 # ---------------------------------------------------------------------------
 
+def _install_frozen(st: CacheState, page) -> CacheState:
+    """Move ``page`` into the frozen region (randomized eviction with
+    ``_PROBES`` probes that skip recently-used entries), dropping it from
+    the window if it currently sits there."""
+    key, sub = jax.random.split(st.key)
+    f = st.frozen_pages.shape[0]
+    # int32 explicitly: under x64 the default int64 probes would downcast
+    # into the int32 slot tables on every traced access (FutureWarning)
+    probes = jax.random.randint(sub, (_PROBES,), 0, f, dtype=jnp.int32)
+    occupied = st.frozen_pages[probes] >= 0
+    recently = (st.clock - st.frozen_last[probes]) < _INUSE_TICKS
+    # prefer an empty probe, else the first not-recently-used, else probe 0
+    score = jnp.where(~occupied, 0, jnp.where(~recently, 1, 2))
+    victim_slot = probes[jnp.argmin(score)]
+    old = st.frozen_pages[victim_slot]
+    status = st.status
+    slot_of = st.slot_of
+    status = jnp.where(old >= 0, status.at[old].set(NOT_CACHED), status)
+    slot_of = jnp.where(old >= 0, slot_of.at[old].set(-1), slot_of)
+    # remove from window
+    in_window = st.status[page] == IN_WINDOW
+    wslot = st.slot_of[page]
+    window_pages = jnp.where(in_window,
+                             st.window_pages.at[wslot].set(-1),
+                             st.window_pages)
+    window_last = jnp.where(in_window,
+                            st.window_last.at[wslot].set(-1),
+                            st.window_last)
+    status = status.at[page].set(IN_FROZEN)
+    slot_of = slot_of.at[page].set(victim_slot)
+    frozen_pages = st.frozen_pages.at[victim_slot].set(page)
+    frozen_last = st.frozen_last.at[victim_slot].set(st.clock)
+    fill = st.frozen_fill + jnp.where(old >= 0, 0, 1)
+    return dataclasses.replace(
+        st, status=status, slot_of=slot_of, window_pages=window_pages,
+        window_last=window_last, frozen_pages=frozen_pages,
+        frozen_last=frozen_last, frozen_fill=fill, key=key)
+
+
 def _navis_hit_window(st: CacheState, page) -> CacheState:
     """Second window hit ⇒ promote to frozen (randomized eviction)."""
     slot = st.slot_of[page]
     hits = st.hits.at[page].add(1)
     window_last = st.window_last.at[slot].set(st.clock)
     st = dataclasses.replace(st, hits=hits, window_last=window_last)
-
-    def promote(st: CacheState) -> CacheState:
-        key, sub = jax.random.split(st.key)
-        f = st.frozen_pages.shape[0]
-        probes = jax.random.randint(sub, (_PROBES,), 0, f)
-        occupied = st.frozen_pages[probes] >= 0
-        recently = (st.clock - st.frozen_last[probes]) < _INUSE_TICKS
-        # prefer an empty probe, else the first not-recently-used, else probe 0
-        score = jnp.where(~occupied, 0, jnp.where(~recently, 1, 2))
-        victim_slot = probes[jnp.argmin(score)]
-        old = st.frozen_pages[victim_slot]
-        status = st.status
-        slot_of = st.slot_of
-        status = jnp.where(old >= 0, status.at[old].set(NOT_CACHED), status)
-        slot_of = jnp.where(old >= 0, slot_of.at[old].set(-1), slot_of)
-        # remove from window
-        wslot = st.slot_of[page]
-        window_pages = st.window_pages.at[wslot].set(-1)
-        window_last = st.window_last.at[wslot].set(-1)
-        status = status.at[page].set(IN_FROZEN)
-        slot_of = slot_of.at[page].set(victim_slot)
-        frozen_pages = st.frozen_pages.at[victim_slot].set(page)
-        frozen_last = st.frozen_last.at[victim_slot].set(st.clock)
-        fill = st.frozen_fill + jnp.where(old >= 0, 0, 1)
-        return dataclasses.replace(
-            st, status=status, slot_of=slot_of, window_pages=window_pages,
-            window_last=window_last, frozen_pages=frozen_pages,
-            frozen_last=frozen_last, frozen_fill=fill, key=key)
-
-    return jax.lax.cond(st.hits[page] >= 2, promote, lambda s: s, st)
+    return jax.lax.cond(st.hits[page] >= 2,
+                        lambda s: _install_frozen(s, page), lambda s: s, st)
 
 
 def _navis_miss(st: CacheState, page) -> CacheState:
     """Admit into the window, evicting the LRU window entry."""
-    victim = jnp.argmin(st.window_last)          # empty slots have last=-1
+    # empty slots have last=-1; int32 keeps the x64 scatter cast-free
+    victim = jnp.argmin(st.window_last).astype(jnp.int32)
     old = st.window_pages[victim]
     status = st.status
     slot_of = st.slot_of
@@ -169,7 +181,7 @@ def _single_region_miss(st: CacheState, page) -> CacheState:
 
     victim = jax.lax.switch(
         jnp.clip(st.policy - 1, 0, 2),
-        [lru_victim, clock_victim, lfu_victim], st)
+        [lru_victim, clock_victim, lfu_victim], st).astype(jnp.int32)
     old = st.window_pages[victim]
     status = st.status
     slot_of = st.slot_of
@@ -292,6 +304,27 @@ def access(st: CacheState, page: jax.Array) -> tuple[jax.Array, CacheState]:
 
     st = jax.lax.cond(hit, on_hit, on_miss, st)
     return hit, st
+
+
+def priority_admit(st: CacheState, page: jax.Array) -> CacheState:
+    """Admit ``page`` straight into the frozen region, bypassing the
+    two-hits-in-window filter (entrance-aware cache hint, paper §7): when
+    the dynamic entrance promotes a vertex, its edgelist page is about to
+    seed every traversal, so it earns frozen residency immediately.
+
+    NAVIS policy only (single-region baselines have no frozen region to
+    pin into); a page already frozen just gets its in-use stamp
+    refreshed.  No I/O is charged — admission moves host memory."""
+    def do(st):
+        def touch(st):
+            slot = st.slot_of[page]
+            return dataclasses.replace(
+                st, frozen_last=st.frozen_last.at[slot].set(st.clock))
+        return jax.lax.cond(st.status[page] == IN_FROZEN, touch,
+                            lambda s: _install_frozen(s, page), st)
+
+    eligible = (st.policy == POLICIES["navis"]) & (page >= 0)
+    return jax.lax.cond(eligible, do, lambda s: s, st)
 
 
 def invalidate_page(st: CacheState, page: jax.Array) -> CacheState:

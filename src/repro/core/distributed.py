@@ -220,7 +220,13 @@ def state_shapes(engine: engine_mod.Engine, n_shards_: int, n_per: int):
         ctr_search=IOCounters.zeros(), ctr_insert=IOCounters.zeros(),
         buf_vecs=jnp.zeros((spec.buffer_max, spec.dim), jnp.float32),
         buf_count=jnp.zeros((), jnp.int32),
-        n_deleted=jnp.zeros((), jnp.int32))
+        n_deleted=jnp.zeros((), jnp.int32),
+        free_list=jnp.full((n_per,), -1, jnp.int32),
+        free_count=jnp.zeros((), jnp.int32),
+        free_mask=jnp.zeros((n_per,), bool),
+        maint_cursor=jnp.zeros((), jnp.int32),
+        young_mask=jnp.zeros((n_per,), bool),
+        ctr_maint=IOCounters.zeros())
     return jax.tree.map(shaped, state)
 
 

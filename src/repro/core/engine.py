@@ -36,6 +36,7 @@ from repro.core import casr as casr_mod
 from repro.core import entrance as ent_mod
 from repro.core import graph as graph_mod
 from repro.core import insert as insert_mod
+from repro.core import maintenance as maint_mod
 from repro.core import pq as pq_mod
 from repro.core import search as search_mod
 from repro.core.iomodel import (IOCounters, PAGE_BYTES, merge_counters,
@@ -78,6 +79,9 @@ class EngineSpec:
     ent_pool: int = 32
     buffer_frac: float = 0.06           # FreshDiskANN merge threshold
     buffer_max: int = 4096
+    consolidate_frac: float = 0.2       # tombstone fraction triggering maint.
+    maint_block: int = 256              # rows repaired per maintenance step
+    maint_refine: bool = True           # re-RobustPrune young rows per pass
 
     @property
     def lspec(self) -> LayoutSpec:
@@ -127,10 +131,24 @@ class EngineState:
     buf_vecs: jax.Array              # [B_max, D] FreshDiskANN memory buffer
     buf_count: jax.Array
     n_deleted: jax.Array
+    free_list: jax.Array             # [N_max] reclaimed slot ids (stack)
+    free_count: jax.Array            # live entries in free_list
+    free_mask: jax.Array             # [N_max] bool — slot reclaimed, unused
+    maint_cursor: jax.Array          # repair-sweep position (maintenance)
+    young_mask: jax.Array            # [N_max] inserted since last refine
+    ctr_maint: IOCounters            # consolidation I/O (SSD-model priced)
 
     @property
     def live_count(self):
         return self.store.count - self.n_deleted
+
+    @property
+    def live_mask(self):
+        """[N_max] bool — slots holding a live (searchable) vector.  With
+        deletions and slot reuse the live set is NOT the count prefix:
+        benchmarks/tests must judge ground truth against this mask."""
+        return (jnp.arange(self.store.n_max) < self.store.count) & \
+            ~self.tombstone
 
 
 class OpStats(NamedTuple):
@@ -182,6 +200,17 @@ class Engine:
         self.insert_batch = jax.jit(self._insert_batch)
         self.insert_many = jax.jit(self._insert_many)
         self.merge = jax.jit(self._merge)
+        self.delete_many = jax.jit(self._delete_many)
+        self._repair_block = jax.jit(functools.partial(
+            maint_mod.repair_block, spec=self.spec.lspec,
+            block=self.spec.maint_block))
+        self._finalize_cycle = jax.jit(functools.partial(
+            maint_mod.reclaim_and_defrag, spec=self.spec.lspec))
+        self._admit_entrance_pages = jax.jit(maint_mod.admit_entrance_pages)
+        self._refine_block = jax.jit(functools.partial(
+            maint_mod.refine_block, spec=self.spec.lspec,
+            e_pos=self.spec.e_pos, beam_width=self.spec.beam_width,
+            max_hops=self.spec.max_hops, visited=self.spec.visited_impl))
 
     # -- construction -------------------------------------------------------
 
@@ -251,7 +280,13 @@ class Engine:
             ctr_search=IOCounters.zeros(), ctr_insert=IOCounters.zeros(),
             buf_vecs=jnp.zeros((spec.buffer_max, dim), jnp.float32),
             buf_count=jnp.zeros((), jnp.int32),
-            n_deleted=jnp.zeros((), jnp.int32))
+            n_deleted=jnp.zeros((), jnp.int32),
+            free_list=jnp.full((n_max,), -1, jnp.int32),
+            free_count=jnp.zeros((), jnp.int32),
+            free_mask=jnp.zeros((n_max,), bool),
+            maint_cursor=jnp.zeros((), jnp.int32),
+            young_mask=jnp.zeros((n_max,), bool),
+            ctr_maint=IOCounters.zeros())
 
     def bundle(self, state: EngineState):
         """(codec, codes, store) — reusable across engine configs."""
@@ -318,8 +353,12 @@ class Engine:
             max_hops=spec.max_hops, frozen_cache=frozen,
             visited=spec.visited_impl)
         ctr = res.counters
-        pool = jnp.where(state.tombstone[jnp.maximum(res.pool_ids, 0)],
-                         -1, res.pool_ids)
+        dead = (res.pool_ids >= 0) & \
+            state.tombstone[jnp.maximum(res.pool_ids, 0)]
+        ctr = dataclasses.replace(
+            ctr, tombstone_skips=ctr.tombstone_skips +
+            dead.sum().astype(jnp.int64))
+        pool = jnp.where(dead, -1, res.pool_ids)
 
         if spec.rerank == "casr":
             cres = casr_mod.casr_rerank(state.store, spec.lspec, q, pool,
@@ -375,19 +414,29 @@ class Engine:
                         page_seen=None, charge_bulk: bool = False):
         spec = self.spec
 
-        # capacity guard: past n_max the whole insertion is masked and the
-        # stats carry ``dropped`` — an unguarded insert would silently lose
-        # the scatter writes (codes.at[count], vectors.at[new_id]) while
-        # count kept incrementing, corrupting main_to_ent and live_count.
-        full = state.store.count >= state.store.n_max
+        # capacity guard: with no free (reclaimed) slot left past n_max the
+        # whole insertion is masked and the stats carry ``dropped`` — an
+        # unguarded insert would silently lose the scatter writes
+        # (codes.at[count], vectors.at[new_id]) while count kept
+        # incrementing, corrupting main_to_ent and live_count.
+        full = (state.store.count >= state.store.n_max) & \
+            (state.free_count <= 0)
 
         def do(state: EngineState):
             ctr0 = IOCounters.zeros()
             lut = pq_mod.adc_lut(self.codec, v)
             entries, e_ent = self._entries(state, lut)
 
+            # maintenance-reclaimed slots are reused before fresh ones:
+            # under sustained churn the free list is what keeps the
+            # acceptance rate at 100% once count reaches n_max
+            reuse = state.free_count > 0
+            slot = jnp.where(
+                reuse,
+                state.free_list[jnp.maximum(state.free_count - 1, 0)],
+                state.store.count).astype(jnp.int32)
             new_code = pq_mod.encode(self.codec, v[None])[0]
-            codes = state.codes.at[state.store.count].set(new_code)
+            codes = state.codes.at[slot].set(new_code)
 
             ires = insert_mod.insert_vertex(
                 state.store, spec.lspec, self.codec, codes, self._sym,
@@ -395,23 +444,38 @@ class Engine:
                 s=spec.s_pos, rerank=spec.rerank,
                 beam_width=spec.beam_width, max_hops=spec.max_hops,
                 tombstone=state.tombstone, page_seen=page_seen,
-                visited=spec.visited_impl)
+                visited=spec.visited_impl, new_id=slot)
             ctr = ires.counters
             if spec.rerank == "full":
                 ctr = self._reclassify(ctr, v, ires.pool_ids, ires.store,
                                        (ires.pool_ids >= 0).sum())
 
             ent = state.ent
+            cache = ires.cache
             if spec.entrance == "dynamic":
                 ent = ent_mod.navis_update(
                     ent, ires.new_id, new_code, ires.pool_ids, e_ent,
                     ires.store.count, codes, self._sym,
                     r_ent_frac=spec.ent_frac)
+                if spec.cache_policy == "navis":
+                    # entrance-aware cache hint (§7): a freshly promoted
+                    # member's edgelist page seeds future traversals
+                    promoted = ent.count > state.ent.count
+                    page = ires.store.edge_page[slot]
+                    cache = lax.cond(
+                        promoted,
+                        lambda c: cache_mod.priority_admit(c, page),
+                        lambda c: c, cache)
 
             stats = _delta_stats(ctr0, ctr, ires.hops + ires.rerank_rounds)
             state = dataclasses.replace(
                 state, store=ires.store, codes=codes, ent=ent,
-                cache=ires.cache,
+                cache=cache,
+                tombstone=state.tombstone.at[slot].set(False),
+                n_deleted=state.n_deleted - reuse.astype(jnp.int32),
+                free_count=state.free_count - reuse.astype(jnp.int32),
+                free_mask=state.free_mask.at[slot].set(False),
+                young_mask=state.young_mask.at[slot].set(True),
                 ctr_insert=merge_counters(state.ctr_insert, ctr))
             return stats, state, ires.page_seen
 
@@ -540,6 +604,143 @@ class Engine:
             state, ent=ent,
             tombstone=state.tombstone.at[vid].set(True),
             n_deleted=state.n_deleted + jnp.where(already, 0, 1))
+
+    def _delete_many(self, state: EngineState,
+                     vids: jax.Array) -> EngineState:
+        """Tombstone a batch of ids ([B] int32; -1 entries are skipped)."""
+        def step(state, vid):
+            return lax.cond(vid >= 0,
+                            lambda s: self.delete(s, vid),
+                            lambda s: s, state), None
+
+        state, _ = lax.scan(step, state, vids)
+        return state
+
+    # -- maintenance (ISSUE 4: reclamation + repair + defrag + refresh) -------
+
+    def needs_consolidation(self, state: EngineState,
+                            lookahead: int = 0) -> jax.Array:
+        """True when a consolidation pass is due: the *unreclaimed*
+        tombstone fraction crossed ``spec.consolidate_frac``, or capacity
+        pressure — fewer than ``lookahead`` insertable slots remain
+        (fresh headroom + free list) while tombstones are waiting to be
+        reclaimed.  ``lookahead`` is the upcoming insert demand (e.g. the
+        next wave size); 0 means "consolidate only when already full"."""
+        pending = state.n_deleted - state.free_count
+        count = jnp.maximum(state.store.count, 1)
+        frac = pending.astype(jnp.float32) / count.astype(jnp.float32)
+        headroom = (state.store.n_max - state.store.count) + \
+            state.free_count
+        return (pending > 0) & (
+            (frac >= self.spec.consolidate_frac) |
+            (headroom < jnp.maximum(lookahead, 1)))
+
+    def maintenance_step(self, state: EngineState):
+        """One bounded increment of the consolidation cycle.
+
+        While the repair cursor is inside the vertex range, repairs the
+        next ``spec.maint_block`` rows (splicing dead-vertex references
+        away — :func:`repro.core.maintenance.repair_block`) and advances.
+        Once the sweep is complete, finalizes the cycle: reclaim every
+        tombstoned slot into the free list, clear the reclaimed rows,
+        defrag the edgelist pages (invalidating moved pages in the
+        cache), rebuild the entrance graph + default entries over the
+        live set, priority-admit the new members' pages, and reset the
+        cursor.  All I/O lands in ``state.ctr_maint``.
+
+        Host-orchestrated (the entrance rebuild sizes its sample from the
+        concrete live count); each stage is jitted.  Returns
+        (state, done) — ``done`` marks cycle completion.
+        """
+        spec = self.spec
+        cur = int(state.maint_cursor)
+        if cur < int(state.store.count):
+            store, cache, ctr, _ = self._repair_block(
+                state.store, state.codes, self._sym, state.tombstone,
+                state.cache, state.ctr_maint, jnp.asarray(cur, jnp.int32))
+            state = dataclasses.replace(
+                state, store=store, cache=cache, ctr_maint=ctr,
+                maint_cursor=jnp.asarray(cur + spec.maint_block,
+                                         jnp.int32))
+            return state, False
+
+        # -- cycle finalization ------------------------------------------
+        import numpy as np
+
+        # ①b: re-RobustPrune the vertices churn inserted since the last
+        # pass — the runtime insert path wires by nearest-PQ without the
+        # build's α-diversity, so without this stage a corpus whose
+        # membership turns over drifts to unrefined-graph recall
+        if spec.maint_refine:
+            young = np.asarray(state.young_mask) & \
+                (np.arange(state.store.n_max) < int(state.store.count)) & \
+                ~np.asarray(state.tombstone)
+            yids = np.flatnonzero(young)
+            if len(yids):
+                store, ctr = state.store, state.ctr_maint
+                rb = 32
+                for s in range(0, len(yids), rb):
+                    blk = np.full((rb,), -1, np.int32)
+                    blk[:len(yids[s:s + rb])] = yids[s:s + rb]
+                    store, ctr, _ = self._refine_block(
+                        store, state.codes, self.codec.codebooks,
+                        self._sym, state.tombstone, state.cache, ctr,
+                        jnp.asarray(blk), jnp.asarray(blk >= 0),
+                        state.default_entries)
+                state = dataclasses.replace(
+                    state, store=store, ctr_maint=ctr,
+                    young_mask=jnp.zeros_like(state.young_mask))
+
+        (store, free_list, free_count, free_mask, cache, ctr,
+         _) = self._finalize_cycle(
+            state.store, state.tombstone, state.free_list,
+            state.free_count, state.free_mask, state.cache,
+            state.ctr_maint)
+        state = dataclasses.replace(
+            state, store=store, free_list=free_list, free_count=free_count,
+            free_mask=free_mask, cache=cache, ctr_maint=ctr,
+            maint_cursor=jnp.zeros((), jnp.int32))
+
+        live_ids = jnp.asarray(np.flatnonzero(np.asarray(state.live_mask)),
+                               jnp.int32)
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(1347),
+            int(store.count) * 131071 + int(state.n_deleted))
+        ent = state.ent
+        if spec.entrance != "none" and live_ids.shape[0] >= 2:
+            # dynamic entrances top themselves back up through Algorithm 2
+            # as inserts flow (navis_update's live-membership trigger);
+            # static ones only ever refresh here
+            ent = maint_mod.refresh_entrance(
+                key, state.codes, self._sym, state.ent, state.tombstone,
+                live_ids, sample_frac=spec.ent_frac, r_ent=spec.r_ent,
+                n_max=store.n_max,
+                top_up=spec.entrance != "dynamic")
+            cache = self._admit_entrance_pages(cache, store, ent)
+        default_entries = state.default_entries
+        if live_ids.shape[0] > 0:
+            default_entries = maint_mod.refresh_default_entries(
+                jax.random.fold_in(key, 1), store.vectors, live_ids,
+                spec.n_entry)
+        state = dataclasses.replace(state, ent=ent, cache=cache,
+                                    default_entries=default_entries)
+        return state, True
+
+    def consolidate(self, state: EngineState):
+        """One full consolidation pass: repair sweep over the whole vertex
+        range, then reclaim + defrag + entrance refresh.  Returns
+        (OpStats, state) — the stats price the pass on the SSD model
+        exactly like any foreground op (serial_rounds = sweep steps)."""
+        ctr0 = state.ctr_maint
+        state = dataclasses.replace(state,
+                                    maint_cursor=jnp.zeros((), jnp.int32))
+        steps, done = 0, False
+        while not done:
+            state, done = self.maintenance_step(state)
+            steps += 1
+        stats = _delta_stats(ctr0, state.ctr_maint,
+                             jnp.asarray(steps, jnp.int32))
+        return stats, state
 
     # -- batches --------------------------------------------------------------
 
@@ -672,43 +873,76 @@ class Engine:
         _, cache = cache_mod.apply_traces(state.cache, traces)
 
         # -- phase ②: serialized conflict-aware commits -------------------
+        # commits draw reclaimed slots from the free list before fresh
+        # ones, so the free structures (and the tombstone bits the reused
+        # slots clear) thread through the scan carry
         n_max = state.store.n_max
         dirty0 = jnp.zeros_like(state.store.page_live, dtype=bool)
 
         def commit(carry, xs):
-            store, codes, ent, cache, dirty = carry
+            (store, codes, ent, cache, dirty, tombstone,
+             free_list, free_count, free_mask, n_deleted,
+             young_mask) = carry
             v, nbrs, code, pool, e_ent, keep = xs
-            can = keep & (store.count < n_max)
+            can = keep & ((store.count < n_max) | (free_count > 0))
 
             def do(args):
-                store, codes, ent, cache, dirty = args
-                new_id = store.count.astype(jnp.int32)
+                (store, codes, ent, cache, dirty, tombstone,
+                 free_list, free_count, free_mask, n_deleted,
+                 young_mask) = args
+                reuse = free_count > 0
+                new_id = jnp.where(
+                    reuse, free_list[jnp.maximum(free_count - 1, 0)],
+                    store.count).astype(jnp.int32)
                 codes = codes.at[new_id].set(code)
                 nbrs2 = insert_mod.revalidate_neighbors(
-                    nbrs, new_id, code, codes, self._sym, state.tombstone)
+                    nbrs, new_id, code, codes, self._sym, tombstone)
                 ctr, _ = insert_mod.charge_rmw_rereads(
                     IOCounters.zeros(), spec.lspec, store, nbrs2, dirty)
                 sres = insert_mod.commit_insert(
                     store, spec.lspec, cache, ctr, v, nbrs2, codes,
-                    self._sym)
+                    self._sym, new_id=new_id)
+                cache = sres.cache
                 dirty = insert_mod.mark_dirty_pages(
                     dirty, sres.store, new_id, nbrs2, sres.modified)
                 if spec.entrance == "dynamic":
-                    ent = ent_mod.navis_update(
+                    ent2 = ent_mod.navis_update(
                         ent, new_id, code, pool, e_ent, sres.store.count,
                         codes, self._sym, r_ent_frac=spec.ent_frac)
-                return ((sres.store, codes, ent, sres.cache, dirty),
+                    if spec.cache_policy == "navis":
+                        promoted = ent2.count > ent.count
+                        page = sres.store.edge_page[new_id]
+                        cache = lax.cond(
+                            promoted,
+                            lambda c: cache_mod.priority_admit(c, page),
+                            lambda c: c, cache)
+                    ent = ent2
+                tombstone = tombstone.at[new_id].set(False)
+                n_deleted = n_deleted - reuse.astype(jnp.int32)
+                free_count = free_count - reuse.astype(jnp.int32)
+                free_mask = free_mask.at[new_id].set(False)
+                young_mask = young_mask.at[new_id].set(True)
+                return ((sres.store, codes, ent, cache, dirty, tombstone,
+                         free_list, free_count, free_mask, n_deleted,
+                         young_mask),
                         sres.counters)
 
             def skip(args):
                 return args, IOCounters.zeros()
 
-            carry, ctr = lax.cond(can, do, skip,
-                                  (store, codes, ent, cache, dirty))
+            carry, ctr = lax.cond(
+                can, do, skip,
+                (store, codes, ent, cache, dirty, tombstone,
+                 free_list, free_count, free_mask, n_deleted, young_mask))
             return carry, (ctr, keep & ~can)
 
-        (store, codes, ent, cache, _), (commit_ctrs, dropped) = lax.scan(
-            commit, (state.store, state.codes, state.ent, cache, dirty0),
+        ((store, codes, ent, cache, _, tombstone, free_list, free_count,
+          free_mask, n_deleted, young_mask),
+         (commit_ctrs, dropped)) = lax.scan(
+            commit,
+            (state.store, state.codes, state.ent, cache, dirty0,
+             state.tombstone, state.free_list, state.free_count,
+             state.free_mask, state.n_deleted, state.young_mask),
             (vectors, nbrs_all, new_codes, pools, e_ents, ok))
 
         per = merge_counters(ctrs, commit_ctrs)            # [B]-leading
@@ -723,6 +957,9 @@ class Engine:
             dropped=dropped)
         state = dataclasses.replace(
             state, store=store, codes=codes, ent=ent, cache=cache,
+            tombstone=tombstone, free_list=free_list,
+            free_count=free_count, free_mask=free_mask,
+            n_deleted=n_deleted, young_mask=young_mask,
             ctr_insert=merge_counters(state.ctr_insert,
                                       sum_counters(per)))
         return stats, state

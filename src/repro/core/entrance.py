@@ -67,26 +67,46 @@ def empty_entrance(c_max: int, r_ent: int, n_max: int) -> EntranceGraph:
 def build_entrance(key: jax.Array, codes: jax.Array, sym_tables: jax.Array,
                    n_live: int, *, c_max: int, r_ent: int,
                    sample_frac: float = 0.01,
-                   n_max: int | None = None) -> EntranceGraph:
+                   n_max: int | None = None,
+                   live_ids: jax.Array | None = None) -> EntranceGraph:
     """Sample ``sample_frac`` of the live vertices and kNN-link them.
 
     Distances use symmetric PQ (code-to-code) so the build never touches the
     slow tier — matching the paper's "in-memory entrance graph" premise.
     The medoid-most vertex (min mean distance) is swapped to index 0, which
     ``entrance_search`` uses as its seed.
+
+    ``live_ids``: optional [n_live] int32 main-graph ids to sample from —
+    after deletions the live set is no longer the prefix ``[0, n_live)``,
+    so a maintenance-pass entrance refresh passes the compacted live ids
+    explicitly (fresh builds omit it and sample the prefix).
     """
     n_max = n_max or codes.shape[0]
     n_sample = max(min(int(n_live * sample_frac), c_max), min(n_live, 2))
     perm = jax.random.permutation(key, n_live)[:n_sample]
     perm = perm.astype(jnp.int32)
+    if live_ids is not None:
+        perm = live_ids[perm].astype(jnp.int32)
+    return link_members(perm, codes, sym_tables, c_max=c_max, r_ent=r_ent,
+                        n_max=n_max)
 
-    sample_codes = codes[perm]                                  # [S, M]
+
+def link_members(members: jax.Array, codes: jax.Array,
+                 sym_tables: jax.Array, *, c_max: int, r_ent: int,
+                 n_max: int) -> EntranceGraph:
+    """kNN-link an explicit member list [S] into an entrance graph (the
+    build's linking stage, split out so a maintenance refresh can keep a
+    chosen member set — e.g. the survivors of the previous entrance —
+    instead of resampling from scratch).  The medoid-most member is
+    swapped to slot 0, which ``entrance_search`` seeds from."""
+    n_sample = members.shape[0]
+    sample_codes = codes[members]                               # [S, M]
     d = pq_mod.sym_distance_matrix(sym_tables, sample_codes)    # [S, S]
     d = d + jnp.eye(n_sample) * INF
     # medoid to slot 0
     med = jnp.argmin(d.sum(axis=1))
     swap = jnp.arange(n_sample).at[0].set(med).at[med].set(0)
-    perm = perm[swap]
+    members = members[swap]
     d = d[swap][:, swap]
 
     k = min(r_ent, n_sample - 1)
@@ -94,12 +114,72 @@ def build_entrance(key: jax.Array, codes: jax.Array, sym_tables: jax.Array,
     edges = jnp.full((c_max, r_ent), -1, jnp.int32)
     edges = edges.at[:n_sample, :k].set(nbr.astype(jnp.int32))
 
-    ids = jnp.full((c_max,), -1, jnp.int32).at[:n_sample].set(perm)
-    main_to_ent = jnp.full((n_max,), -1, jnp.int32).at[perm].set(
+    ids = jnp.full((c_max,), -1, jnp.int32).at[:n_sample].set(members)
+    main_to_ent = jnp.full((n_max,), -1, jnp.int32).at[members].set(
         jnp.arange(n_sample, dtype=jnp.int32))
     return EntranceGraph(ids=ids, edges=edges,
                          count=jnp.asarray(n_sample, jnp.int32),
                          main_to_ent=main_to_ent)
+
+
+def add_member(ent: EntranceGraph, vid: jax.Array, codes: jax.Array,
+               sym_tables: jax.Array) -> EntranceGraph:
+    """Append one live vertex as an entrance member, wiring it to its
+    ``R_ent`` symmetric-PQ-nearest existing members with reciprocal
+    links + prune — the maintenance refresh's top-up primitive (a full
+    member resample has brutal coverage variance at the ~1% sample size;
+    adding into the existing structure preserves it).  No-op when ``vid``
+    is already a member or the slot high-water mark hit ``c_max``."""
+    r_ent = ent.r_ent
+    want = (ent.count < ent.c_max) & (vid >= 0)
+    want &= ent.main_to_ent[jnp.maximum(vid, 0)] < 0
+
+    def do(ent: EntranceGraph) -> EntranceGraph:
+        live = ent.ids >= 0
+        d = jnp.where(live, pq_mod.sym_distance(
+            sym_tables, codes[vid], codes[jnp.maximum(ent.ids, 0)]), INF)
+        order = jnp.argsort(d)
+        slots = jnp.arange(ent.c_max, dtype=jnp.int32)
+        nbrs = jnp.where(live[order], slots[order], -1)[:r_ent]
+
+        slot = ent.count
+        ids = ent.ids.at[slot].set(vid)
+        main_to_ent = ent.main_to_ent.at[vid].set(slot)
+        edges = ent.edges.at[slot].set(nbrs)
+        new_code = codes[vid]
+
+        def wire(edges, i):
+            p = nbrs[i]
+
+            def wire_one(edges):
+                row = edges[p]
+                occupied = row >= 0
+                free = jnp.argmin(occupied)
+                has_free = ~occupied.all()
+                p_code = codes[ids[p]]
+                row_codes = codes[ids[jnp.maximum(row, 0)]]
+                d_row = jnp.where(
+                    occupied,
+                    pq_mod.sym_distance(sym_tables, p_code, row_codes),
+                    -INF)
+                worst = jnp.argmax(d_row)
+                d_q = pq_mod.sym_distance(sym_tables, p_code,
+                                          new_code[None])[0]
+                tgt = jnp.where(has_free, free, worst)
+                write = has_free | (d_q < d_row[worst])
+                new_row = jnp.where(
+                    write, row.at[tgt].set(slot.astype(jnp.int32)), row)
+                return edges.at[p].set(new_row)
+
+            return lax.cond((p >= 0) & (p != slot), wire_one,
+                            lambda e: e, edges), None
+
+        edges, _ = lax.scan(wire, edges, jnp.arange(r_ent))
+        return dataclasses.replace(
+            ent, ids=ids, edges=edges, count=ent.count + 1,
+            main_to_ent=main_to_ent)
+
+    return lax.cond(want, do, lambda e: e, ent)
 
 
 # ---------------------------------------------------------------------------
@@ -121,7 +201,13 @@ def navis_update(ent: EntranceGraph, new_id: jax.Array, new_code: jax.Array,
     ``codes[new_id]`` (insert waves commit with the code in hand).
     """
     r_ent = ent.r_ent
-    want = (ent.count.astype(jnp.float32)
+    # coverage is judged on *live* membership, not the slot high-water
+    # mark (``ent.count``): deletes scrub members without reclaiming
+    # their slots, and comparing against count would permanently stall
+    # promotions after churn — live membership is what lets Algorithm 2
+    # top the entrance back up as inserts flow (self-healing entrance).
+    n_members = (ent.ids >= 0).sum()
+    want = (n_members.astype(jnp.float32)
             < r_ent_frac * graph_count.astype(jnp.float32))
     want &= ent.count < ent.c_max
     # a vertex already promoted must not be promoted twice

@@ -39,9 +39,19 @@ INF = jnp.float32(3.4e38)
 
 def brute_force_topk(queries: jax.Array, vectors: jax.Array,
                      n_live, k: int) -> jax.Array:
-    """Exact top-k ids per query.  queries: [Q, D]; considers rows < n_live."""
+    """Exact top-k ids per query.  queries: [Q, D].
+
+    ``n_live`` is either a count (considers the prefix ``[0, n_live)`` —
+    fresh builds, where live vertices are contiguous) or a [N] bool mask
+    (churned corpora: deletions punch holes in the prefix and reclaimed
+    slots hold stale vectors, so the caller passes the exact live set).
+    """
     vnorm = jnp.sum(vectors * vectors, axis=1)                 # [N]
-    live = jnp.arange(vectors.shape[0]) < n_live
+    if getattr(n_live, "dtype", None) == jnp.bool_ and \
+            getattr(n_live, "ndim", 0) == 1:
+        live = n_live
+    else:
+        live = jnp.arange(vectors.shape[0]) < n_live
 
     def per_q(q):
         d = vnorm - 2.0 * (vectors @ q)                        # [N] (+‖q‖²)
@@ -298,15 +308,21 @@ def _truncate(store: GraphStore, n_keep: int) -> GraphStore:
     edges = np.asarray(store.edges).copy()
     degree = np.asarray(store.degree).copy()
     edge_page = np.asarray(store.edge_page).copy()
+    page_live = np.asarray(store.page_live).copy()
     mask = edges >= n_keep
     degree = degree - mask.sum(axis=1)
     edges = np.where(mask, -1, edges)
     edges[n_keep:] = -1
     degree[n_keep:] = 0
+    # give the dropped rows' page slots back: a phantom live count would
+    # suppress the dead-page eviction hints downstream (§8.2, repair)
+    dropped_pages = edge_page[n_keep:]
+    np.subtract.at(page_live, dropped_pages[dropped_pages >= 0], 1)
     edge_page[n_keep:] = -1
     return dataclasses.replace(
         store, edges=jnp.asarray(edges), degree=jnp.asarray(degree),
         edge_page=jnp.asarray(edge_page),
+        page_live=jnp.asarray(page_live),
         count=jnp.asarray(n_keep, jnp.int32))
 
 
@@ -314,8 +330,14 @@ def _truncate(store: GraphStore, n_keep: int) -> GraphStore:
 # Graph invariants (tested; also used as a runtime sanity hook)
 # ---------------------------------------------------------------------------
 
-def check_invariants(store: GraphStore) -> dict:
-    """Pure-jnp invariant summary: all must hold for a well-formed graph."""
+def check_invariants(store: GraphStore,
+                     tombstone: jax.Array | None = None) -> dict:
+    """Pure-jnp invariant summary: all must hold for a well-formed graph.
+
+    With ``tombstone`` supplied, additionally checks the post-consolidation
+    contract: no live vertex's edgelist references a tombstoned vertex
+    (the maintenance repair pass spliced every dead pointer away).
+    """
     n = store.count
     live = jnp.arange(store.n_max) < n
     edges = store.edges
@@ -327,6 +349,12 @@ def check_invariants(store: GraphStore) -> dict:
     deg_ok = (jnp.where(live, deg <= store.r, True)).all()
     deg_matches = (jnp.where(live, deg == store.degree, True)).all()
     dead_clean = (~live[:, None] | valid_edges | (edges == -1)).all()
-    return {"edges_in_range": in_range, "no_self_loops": no_self,
-            "degree_le_r": deg_ok, "degree_field_consistent": deg_matches,
-            "padding_clean": dead_clean}
+    out = {"edges_in_range": in_range, "no_self_loops": no_self,
+           "degree_le_r": deg_ok, "degree_field_consistent": deg_matches,
+           "padding_clean": dead_clean}
+    if tombstone is not None:
+        row_live = live & ~tombstone
+        out["no_dead_refs"] = jnp.where(
+            row_live[:, None] & valid_edges,
+            ~tombstone[jnp.maximum(edges, 0)], True).all()
+    return out

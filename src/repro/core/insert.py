@@ -172,10 +172,17 @@ def _charge_writes(counters: IOCounters, spec: LayoutSpec,
 def structural_update(store: GraphStore, spec: LayoutSpec,
                       cache: cache_mod.CacheState, counters: IOCounters,
                       new_vec: jax.Array, nbrs: jax.Array,
-                      codes: jax.Array, sym_tables: jax.Array
-                      ) -> StructuralResult:
-    """② Commit vertex ``store.count`` with neighbor list ``nbrs`` [R]."""
-    new_id = store.count.astype(jnp.int32)
+                      codes: jax.Array, sym_tables: jax.Array,
+                      new_id: jax.Array | None = None) -> StructuralResult:
+    """② Commit a new vertex with neighbor list ``nbrs`` [R].
+
+    ``new_id`` picks the slot: ``None`` (the default, and the only mode
+    before the maintenance subsystem existed) appends at ``store.count``;
+    an explicit id < count re-occupies a slot the maintenance pass
+    reclaimed from a tombstoned vertex — ``count`` only advances when the
+    slot extends the prefix, so reuse never inflates the live range.
+    """
+    new_id = (store.count if new_id is None else new_id).astype(jnp.int32)
     r = store.r
 
     # the new vertex's own record
@@ -183,7 +190,8 @@ def structural_update(store: GraphStore, spec: LayoutSpec,
         store.vectors.dtype))
     nbrs = jnp.where(nbrs == new_id, -1, nbrs)               # no self loops
     edges = store.edges.at[new_id].set(nbrs)
-    degree = store.degree.at[new_id].set((nbrs >= 0).sum())
+    degree = store.degree.at[new_id].set(
+        (nbrs >= 0).sum().astype(store.degree.dtype))
     store = dataclasses.replace(store, vectors=vectors, edges=edges,
                                 degree=degree)
 
@@ -191,7 +199,7 @@ def structural_update(store: GraphStore, spec: LayoutSpec,
     edges, degree, modified = _wire_reciprocal(store, nbrs, new_id, codes,
                                                sym_tables)
     store = dataclasses.replace(store, edges=edges, degree=degree,
-                                count=store.count + 1)
+                                count=jnp.maximum(store.count, new_id + 1))
 
     n_modified = modified.sum()
     if spec.kind == "packed":
@@ -347,8 +355,11 @@ def position_seek(store: GraphStore, spec: LayoutSpec, codec: pq_mod.PQCodec,
     cache = res.cache
     pool_ids = res.pool_ids
     if tombstone is not None:
-        pool_ids = jnp.where(tombstone[jnp.maximum(pool_ids, 0)], -1,
-                             pool_ids)
+        dead = (pool_ids >= 0) & tombstone[jnp.maximum(pool_ids, 0)]
+        counters = dataclasses.replace(
+            counters, tombstone_skips=counters.tombstone_skips +
+            dead.sum().astype(jnp.int64))
+        pool_ids = jnp.where(dead, -1, pool_ids)
 
     if rerank == "casr":
         cres = casr_mod.casr_rerank(store, spec, new_vec, pool_ids,
@@ -393,24 +404,28 @@ def insert_vertex(store: GraphStore, spec: LayoutSpec, codec: pq_mod.PQCodec,
                   beam_width: int = 4, max_hops: int = 512,
                   tombstone: jax.Array | None = None,
                   page_seen: jax.Array | None = None,
-                  visited: str = "hash") -> InsertResult:
+                  visited: str = "hash",
+                  new_id: jax.Array | None = None) -> InsertResult:
     """One in-place insertion.  ``rerank``: "casr" | "full" (static).
 
-    The caller encodes the new vector into ``codes[store.count]`` *before*
-    calling (PQ codes live in host memory and are updated synchronously).
-    ``tombstone`` masks deleted vertices out of neighbor selection;
-    ``page_seen`` seeds the traversal's page buffer (bulk merges).
+    The caller encodes the new vector into the target slot of ``codes``
+    *before* calling (PQ codes live in host memory and are updated
+    synchronously).  ``tombstone`` masks deleted vertices out of neighbor
+    selection; ``page_seen`` seeds the traversal's page buffer (bulk
+    merges); ``new_id`` commits into a reclaimed slot instead of
+    appending at ``store.count`` (free-list reuse).
     """
     seek = position_seek(
         store, spec, codec, codes, cache, counters, new_vec, entry_ids,
         e_pos=e_pos, k=k, s=s, rerank=rerank, beam_width=beam_width,
         max_hops=max_hops, tombstone=tombstone, page_seen=page_seen,
         visited=visited)
+    nid = (store.count if new_id is None else new_id).astype(jnp.int32)
     sres = commit_insert(store, spec, seek.cache, seek.counters, new_vec,
-                         seek.nbrs, codes, sym_tables)
+                         seek.nbrs, codes, sym_tables, new_id=nid)
     return InsertResult(store=sres.store, cache=sres.cache,
                         counters=sres.counters,
-                        new_id=sres.store.count - 1,
+                        new_id=nid,
                         pool_ids=seek.pool_ids, hops=seek.hops,
                         rerank_rounds=seek.rerank_rounds,
                         page_seen=seek.page_seen)

@@ -41,6 +41,10 @@ class IOCounters:
     # hashed-visited-set saturation events (impossible at default capacity;
     # a saturated traversal may re-expand vertices, re-charging I/O only)
     visited_overflow: jax.Array
+    # explored-pool slots wasted on tombstoned vertices (the traversal
+    # scored/loaded them, the result mask threw them away) — the churn
+    # benchmarks read this to quantify pre-consolidation degradation
+    tombstone_skips: jax.Array
 
     @classmethod
     def zeros(cls) -> "IOCounters":

@@ -177,3 +177,49 @@ def relocate_edgelists(store: GraphStore, vertex_ids: jax.Array,
         store, edge_page=edge_page, page_live=page_live,
         next_page=base + jnp.asarray(n_new_pages, jnp.int32))
     return store, pages_written.astype(jnp.int64)
+
+
+# ---------------------------------------------------------------------------
+# Defragmentation (maintenance pass, ISSUE 4)
+# ---------------------------------------------------------------------------
+
+def defrag_edgelists(store: GraphStore, holders: jax.Array,
+                     spec: LayoutSpec):
+    """Re-pack every page-holding vertex's edgelist contiguously from page 0.
+
+    Sustained out-of-place updates scatter co-traversed edgelists across
+    fresh pages (page-level locality drifts) and monotonically burn the
+    bump allocator; a defrag pass restores the build-time id-contiguous
+    placement — consecutive ids (graph-adjacency order, as the builder
+    lays them out) share pages again — and *resets* ``next_page``, so the
+    page-id space is bounded by churn-per-maintenance-cycle instead of
+    lifetime insert count.
+
+    ``holders``: [n_max] bool — vertices that must keep an edge page
+    (live vertices, plus any tombstoned vertex not yet reclaimed).
+    Everything else gets ``edge_page = -1``.
+
+    Returns (store, changed_pages [p_max] bool, n_pages int32) —
+    ``changed_pages`` marks every page id whose *contents* differ after
+    the move (old homes of moved vertices + their new homes); the caller
+    must invalidate those in the host cache.
+    """
+    per = (spec.packed_per_page if spec.kind == "packed"
+           else spec.edgelists_per_page)
+    p_max = store.page_live.shape[0]
+    rank = jnp.cumsum(holders.astype(jnp.int32)) - 1
+    new_page = jnp.where(holders, rank // per, -1).astype(jnp.int32)
+    n_hold = holders.sum().astype(jnp.int32)
+    n_pages = jnp.where(n_hold > 0, -(-n_hold // per), 0).astype(jnp.int32)
+
+    page_live = jnp.zeros_like(store.page_live).at[
+        jnp.where(holders, new_page, p_max)].add(1)        # OOB = dropped
+    moved = store.edge_page != new_page
+    changed = jnp.zeros((p_max,), bool)
+    changed = changed.at[jnp.where(moved & (store.edge_page >= 0),
+                                   store.edge_page, p_max)].set(True)
+    changed = changed.at[jnp.where(moved & holders, new_page,
+                                   p_max)].set(True)
+    store = dataclasses.replace(store, edge_page=new_page,
+                                page_live=page_live, next_page=n_pages)
+    return store, changed, n_pages
